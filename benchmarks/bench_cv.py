@@ -1,0 +1,70 @@
+"""Paper Fig. 5 — generality beyond O-RAN traffic (CIFAR-10/100 stand-in).
+
+Offline container: CIFAR is not downloadable and conv stacks are out of the
+inversion's linear-layer scope (DESIGN.md §7), so we reproduce the
+EXPERIMENT'S SHAPE with a synthetic vision-like task: 10 classes of
+correlated 256-dim "feature-extractor outputs" (what VGG/ResNet trunks feed
+their classifier MLPs), trained with a deeper DNN split the same way.
+The claim being checked is the paper's: SplitMe's mutual learning + one-shot
+inversion also works beyond 3-class traffic data.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.configs.splitme_dnn import DNNConfig
+from repro.core.cost import SystemParams
+from repro.core.splitme import SplitMeTrainer
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def _vision_like(n_per_class=300, n_classes=10, dim=256, seed=0):
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(0, 1, (n_classes, dim))
+    xs, ys = [], []
+    for c in range(n_classes):
+        x = protos[c] + 1.8 * rng.normal(0, 1, (n_per_class, dim))
+        xs.append(x); ys.append(np.full(n_per_class, c))
+    X = np.concatenate(xs).astype(np.float32)
+    y = np.concatenate(ys).astype(np.int32)
+    X = (X - X.mean(0)) / (X.std(0) + 1e-6)
+    idx = rng.permutation(len(y))
+    return X[idx], y[idx]
+
+
+def run(fast: bool = False):
+    cfg = DNNConfig(name="cv-dnn", n_features=256, n_classes=10,
+                    hidden=(512, 256, 128, 64, 32), split_index=2)
+    X, y = _vision_like(seed=0)
+    n_test = len(y) // 5
+    Xte, yte = X[:n_test], y[:n_test]
+    Xtr, ytr = X[n_test:], y[n_test:]
+    M = 20
+    spc = 96
+    rng = np.random.default_rng(0)
+    # non-IID: two classes per client
+    Xc = np.zeros((M, spc, 256), np.float32)
+    yc = np.zeros((M, spc), np.int32)
+    for m in range(M):
+        cls = [(2 * m) % 10, (2 * m + 1) % 10]
+        pool = np.where(np.isin(ytr, cls))[0]
+        take = rng.choice(pool, spc, replace=True)
+        Xc[m], yc[m] = Xtr[take], ytr[take]
+    sp = SystemParams(M=M, b_min=1.0 / M, seed=0)
+    tr = SplitMeTrainer(cfg, sp, {"x": Xc, "y": yc}, (Xte, yte),
+                        lr_c=0.05, lr_s=0.02, seed=0)
+    rounds = 6 if fast else 25
+    for _ in range(rounds):
+        tr.run_round()
+    acc = tr.evaluate()
+    us = time_fn(lambda: tr.run_round(), iters=1, warmup=0)
+    RESULTS.mkdir(exist_ok=True, parents=True)
+    (RESULTS / "cv_generality.json").write_text(json.dumps(
+        {"rounds": rounds + 1, "accuracy": acc, "n_classes": 10}))
+    return [("fig5_cv_generality_splitme", us,
+             f"acc10class={acc:.3f};rounds={rounds}")]

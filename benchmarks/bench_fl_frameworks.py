@@ -1,0 +1,85 @@
+"""Paper Figures 3a/3b/4a/4b — the four frameworks on the O-RAN slice data.
+
+One training campaign per framework produces all four paper artifacts:
+  Fig 3a: number of selected trainers per round
+  Fig 3b: accumulated communication volume (MB)
+  Fig 4a: test accuracy vs (simulated) total training time
+  Fig 4b: accumulated communication resource cost vs time
+Results are also dumped to benchmarks/results/fl_frameworks.json for the
+EXPERIMENTS.md tables.
+"""
+from __future__ import annotations
+
+import copy
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.splitme_dnn import DNN10
+from repro.core.baselines import FedAvgTrainer, ORANFedTrainer, SFLTrainer
+from repro.core.cost import SystemParams
+from repro.core.splitme import SplitMeTrainer
+from repro.data import oran
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+# paper: SplitMe needs 30 rounds; baselines recorded for 150.  CPU budget:
+# baselines get 60 rounds here (trend is established; see EXPERIMENTS.md).
+ROUNDS = {"splitme": 30, "fedavg": 60, "sfl": 60, "oranfed": 60}
+
+
+def run(fast: bool = False):
+    rounds = {k: (8 if fast else v) for k, v in ROUNDS.items()}
+    X, y = oran.generate(n_per_class=2000, seed=0)
+    (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
+    cd = oran.partition_non_iid(Xtr, ytr, 50, samples_per_client=96, seed=0)
+
+    makers = {
+        "splitme": lambda sp: SplitMeTrainer(DNN10, sp, copy.deepcopy(cd),
+                                             (Xte, yte), seed=0),
+        "fedavg": lambda sp: FedAvgTrainer(DNN10, sp, copy.deepcopy(cd),
+                                           (Xte, yte), K=10, E=10, seed=0),
+        "sfl": lambda sp: SFLTrainer(DNN10, sp, copy.deepcopy(cd),
+                                     (Xte, yte), K=20, E=14, seed=0),
+        "oranfed": lambda sp: ORANFedTrainer(DNN10, sp, copy.deepcopy(cd),
+                                             (Xte, yte), E=10, seed=0),
+    }
+    rows: list[Row] = []
+    summary = {}
+    for name, make in makers.items():
+        tr = make(SystemParams(seed=0))
+        t0 = time.perf_counter()
+        for k in range(rounds[name]):
+            tr.run_round(eval_acc=(k % 5 == 4 or k == rounds[name] - 1))
+        wall_us = (time.perf_counter() - t0) / rounds[name] * 1e6
+        h = tr.history
+        acc = tr.evaluate()
+        total_mb = sum(m.comm_bits for m in h) / 8e6
+        total_time = sum(m.sim_time for m in h)
+        total_cost = sum(m.cost for m in h)
+        summary[name] = {
+            "rounds": rounds[name],
+            "final_accuracy": acc,
+            "selected_per_round": [m.n_selected for m in h],
+            "comm_mb_cumulative": float(np.cumsum(
+                [m.comm_bits / 8e6 for m in h])[-1]),
+            "sim_time_s": total_time,
+            "resource_cost": total_cost,
+            "accuracy_curve": [(m.round, m.accuracy) for m in h
+                               if m.accuracy == m.accuracy],
+            "E_per_round": [m.E for m in h],
+        }
+        rows.append((f"fig3a_selected_{name}", wall_us,
+                     f"mean_sel={np.mean([m.n_selected for m in h]):.1f}"))
+        rows.append((f"fig3b_commvol_{name}", wall_us,
+                     f"total_MB={total_mb:.1f}"))
+        rows.append((f"fig4a_accuracy_{name}", wall_us,
+                     f"acc={acc:.3f};sim_time_s={total_time:.2f}"))
+        rows.append((f"fig4b_cost_{name}", wall_us,
+                     f"resource_cost={total_cost:.1f}"))
+    RESULTS.mkdir(exist_ok=True, parents=True)
+    (RESULTS / "fl_frameworks.json").write_text(json.dumps(summary, indent=1))
+    return rows

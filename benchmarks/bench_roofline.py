@@ -1,0 +1,72 @@
+"""Roofline tables from the committed dry-run artifacts (EXPERIMENTS.md
+§Roofline).  Emits one row per (arch × shape × mesh) and writes the markdown
+table used in EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import Row
+
+DRYRUN = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_all(include_tagged: bool = False):
+    """Prefer the extrapolated __roofline.json artifacts (exact per-layer
+    accounting); fall back to the scan-based compile-proof JSONs."""
+    roof, base = {}, {}
+    for f in sorted(DRYRUN.glob("*.json")):
+        if "__opt" in f.name and not include_tagged:
+            continue
+        d = json.loads(f.read_text())
+        if not d.get("ok"):
+            continue
+        key = (d.get("arch"), d.get("shape"), d.get("mesh"))
+        if f.name.endswith("__roofline.json"):
+            roof[key] = d
+        else:
+            base[key] = d
+    merged = dict(base)
+    merged.update(roof)
+    return list(merged.values())
+
+
+def to_markdown(entries) -> str:
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "dominant | useful-FLOPs | HBM GiB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for d in sorted(entries, key=lambda d: (d["arch"], d["shape"], d["mesh"])):
+        pdb = (d.get("per_device_bytes")
+               or d.get("full_compile", {}).get("per_device_bytes") or {})
+        hbm = (pdb.get("argument", 0) + pdb.get("temp", 0)) / 2**30
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d['compute_s']:.2e} | {d['memory_s']:.2e} "
+            f"| {d['collective_s']:.2e} | **{d['dominant']}** "
+            f"| {d['useful_flops_ratio']:.2f} | {hbm:.1f} |")
+    return "\n".join(lines)
+
+
+def run(fast: bool = False):
+    entries = load_all()
+    rows: list[Row] = []
+    if not entries:
+        return [("roofline_table", 0.0, "missing: run repro.launch.dryrun")]
+    (DRYRUN.parent / "roofline_table.md").write_text(to_markdown(entries))
+    n_dom = {}
+    for d in entries:
+        n_dom[d["dominant"]] = n_dom.get(d["dominant"], 0) + 1
+    rows.append(("roofline_combos_ok", 0.0, f"n={len(entries)}"))
+    rows.append(("roofline_dominant_split", 0.0,
+                 ";".join(f"{k}={v}" for k, v in sorted(n_dom.items()))))
+    # headline: the three hillclimb targets
+    for d in entries:
+        if d["mesh"] != "16x16":
+            continue
+        key = f"roofline_{d['arch']}_{d['shape']}"
+        tot = d["compute_s"] + d["memory_s"] + d["collective_s"]
+        frac = d["compute_s"] / tot if tot else 0.0
+        rows.append((key, 0.0,
+                     f"dom={d['dominant']};compute_frac={frac:.3f};"
+                     f"useful={d['useful_flops_ratio']:.2f}"))
+    return rows

@@ -1,0 +1,26 @@
+"""Benchmark plumbing: timing + CSV row helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]   # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocks on jax outputs)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def print_rows(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,36 @@
+"""Quickstart: SplitMe on synthetic O-RAN slice traffic in ~30 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs 10 global rounds of the full pipeline — deadline-aware selection
+(Alg. 1), bandwidth/E allocation (P2), mutual-learning split training, and
+the final analytic inversion (Step 4) — then prints the combined model's
+test accuracy.
+"""
+import numpy as np
+
+from repro.configs.splitme_dnn import DNN10
+from repro.core.cost import SystemParams
+from repro.core.splitme import SplitMeTrainer
+from repro.data import oran
+
+
+def main():
+    X, y = oran.generate(n_per_class=1000, seed=0)
+    (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
+    sp = SystemParams()
+    clients = oran.partition_non_iid(Xtr, ytr, sp.M,
+                                     samples_per_client=64, seed=0)
+    trainer = SplitMeTrainer(DNN10, sp, clients, (Xte, yte), seed=0)
+    print("round | selected | E | comm MB | latency ms | client KL")
+    for k in range(10):
+        m = trainer.run_round()
+        print(f"{m.round:5d} | {m.n_selected:8d} | {m.E} |"
+              f" {m.comm_bits / 8e6:7.2f} | {m.sim_time * 1e3:10.1f} |"
+              f" {m.client_loss:.4f}")
+    w_server = trainer.finalize()       # Step 4: one-shot analytic inversion
+    print(f"\nfinal accuracy after inversion: {trainer.evaluate(w_server):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""O-RAN SFL resource & latency cost model (paper §IV-A/B, eq. 16-21).
+
+All quantities are per global round; the optimization target is
+K_ε(E) · cost(t) with K_ε from Corollary 4.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class SystemParams:
+    """Table III of the paper."""
+    M: int = 50                       # max number of local trainers
+    B: float = 1e9                    # total uplink bandwidth (bits/s)
+    p_c: float = 1.0                  # per-unit communication cost
+    p_tr: float = 1.0                 # per-unit computation cost
+    b_min: float = 1.0 / 50           # minimum bandwidth fraction
+    omega: float = 1.0 / 5            # client-side fraction of model params
+    rho: float = 0.8                  # Pareto trade-off
+    alpha: float = 0.7                # heuristic factor (Alg. 1)
+    eps: float = 0.1                  # target accuracy level for K_eps
+    E_max: int = 20                   # largest admissible local updates
+    seed: int = 0
+    # drawn per-client (paper: U(0.34,0.46) ms and U(1.2,1.6) ms)
+    Q_C: np.ndarray = field(default=None, repr=False)
+    Q_S: np.ndarray = field(default=None, repr=False)
+    t_round: np.ndarray = field(default=None, repr=False)  # U(50,100) ms
+    S_m: np.ndarray = field(default=None, repr=False)      # smashed bytes/client
+    d_model_bits: float = 8e6          # entire-model size in bits
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        if self.Q_C is None:
+            self.Q_C = rng.uniform(0.34e-3, 0.46e-3, self.M)
+        if self.Q_S is None:
+            self.Q_S = rng.uniform(1.2e-3, 1.6e-3, self.M)
+        if self.t_round is None:
+            self.t_round = rng.uniform(50e-3, 100e-3, self.M)
+        if self.S_m is None:
+            # intermediate feature matrix bits per client (dataset-dependent,
+            # overwritten by the trainer with the real size)
+            self.S_m = np.full(self.M, 1e6)
+
+
+def k_eps(E: int, eps: float) -> float:
+    """Corollary 4: K_ε >= O((E+1)^2 / (E^2 ε^2))."""
+    return (E + 1) ** 2 / (E ** 2 * eps ** 2)
+
+
+def comm_cost(a: np.ndarray, b: np.ndarray, sp: SystemParams) -> float:
+    """eq. 16: R_co = Σ a_m b_m B p_c."""
+    return float(np.sum(a * b) * sp.B * sp.p_c)
+
+
+def comp_cost(a: np.ndarray, E: int, sp: SystemParams) -> float:
+    """eq. 17: R_cp = Σ a_m E (Q_C,m + Q_S,m) p_tr."""
+    return float(np.sum(a * E * (sp.Q_C + sp.Q_S)) * sp.p_tr)
+
+
+def uplink_time(a: np.ndarray, b: np.ndarray, sp: SystemParams) -> np.ndarray:
+    """eq. 19: T_co,m = (S_m + ω d) / (b_m B), for selected clients."""
+    with np.errstate(divide="ignore"):
+        t = (sp.S_m + sp.omega * sp.d_model_bits) / np.maximum(b * sp.B, 1e-12)
+    return np.where(a > 0, t, 0.0)
+
+
+def total_time(a: np.ndarray, b: np.ndarray, E: int,
+               sp: SystemParams) -> float:
+    """eq. 18: max{E Q_C,m + T_co,m} + max{E Q_S,m} over selected."""
+    if a.sum() == 0:
+        return 0.0
+    t_co = uplink_time(a, b, sp)
+    t1 = np.max(np.where(a > 0, E * sp.Q_C + t_co, -np.inf))
+    t2 = np.max(np.where(a > 0, E * sp.Q_S, -np.inf))
+    return float(t1 + t2)
+
+
+def round_cost(a: np.ndarray, b: np.ndarray, E: int, sp: SystemParams) -> float:
+    """eq. 20."""
+    return (sp.rho * (comm_cost(a, b, sp) / sp.B + comp_cost(a, E, sp))
+            + (1 - sp.rho) * total_time(a, b, E, sp))
+
+
+def objective(a: np.ndarray, b: np.ndarray, E: int, sp: SystemParams) -> float:
+    """eq. 22: K_ε · cost(t)."""
+    return k_eps(E, sp.eps) * round_cost(a, b, E, sp)

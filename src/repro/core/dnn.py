@@ -1,0 +1,110 @@
+"""The paper's model substrate: an MLP ("ten-layer DNN", §V-A) with a
+layer-wise split into client-side model c(·), server-side model s(·) and the
+*inverse* server-side model s⁻¹(·).
+
+The inverse model mirrors the server stack: if s maps
+d_split → … → n_classes, then s⁻¹ maps n_classes → … → d_split, so the
+activation of s⁻¹ at depth (L_s − l) is the supervised target Z_l for layer l
+of s in the analytic inversion (eq. 8-9).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.splitme_dnn import DNNConfig
+from repro.models.common import activation_fn
+
+
+def init_mlp(key, dims: Sequence[int]) -> List[dict]:
+    """Stack of {w, b} with He init; eval_shape-safe."""
+    layers = []
+    for i, k in enumerate(jax.random.split(key, len(dims) - 1)):
+        w = jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32)
+        w = w * jnp.sqrt(2.0 / dims[i])
+        layers.append({"w": w, "b": jnp.zeros((dims[i + 1],), jnp.float32)})
+    return layers
+
+
+def mlp_forward(layers: List[dict], x: jax.Array, activation: str = "relu",
+                final_linear: bool = True) -> jax.Array:
+    act = activation_fn(activation)
+    for i, p in enumerate(layers):
+        x = x @ p["w"] + p["b"]
+        if i < len(layers) - 1 or not final_linear:
+            x = act(x)
+    return x
+
+
+def mlp_activations(layers: List[dict], x: jax.Array,
+                    activation: str = "relu") -> List[jax.Array]:
+    """All post-layer activations [a_1 … a_L] (last one linear)."""
+    act = activation_fn(activation)
+    outs = []
+    for i, p in enumerate(layers):
+        x = x @ p["w"] + p["b"]
+        if i < len(layers) - 1:
+            x = act(x)
+        outs.append(x)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Split machinery
+# ---------------------------------------------------------------------------
+
+def client_dims(cfg: DNNConfig) -> Tuple[int, ...]:
+    return cfg.layer_dims[: cfg.split_index + 1]
+
+
+def server_dims(cfg: DNNConfig) -> Tuple[int, ...]:
+    return cfg.layer_dims[cfg.split_index:]
+
+
+def inverse_server_dims(cfg: DNNConfig) -> Tuple[int, ...]:
+    return tuple(reversed(server_dims(cfg)))
+
+
+def init_client(key, cfg: DNNConfig) -> List[dict]:
+    return init_mlp(key, client_dims(cfg))
+
+
+def init_server(key, cfg: DNNConfig) -> List[dict]:
+    return init_mlp(key, server_dims(cfg))
+
+
+def init_inverse_server(key, cfg: DNNConfig) -> List[dict]:
+    return init_mlp(key, inverse_server_dims(cfg))
+
+
+def client_forward(params: List[dict], x: jax.Array,
+                   cfg: DNNConfig) -> jax.Array:
+    """c(X): features at the split layer (post-activation)."""
+    return mlp_forward(params, x, cfg.activation, final_linear=False)
+
+
+def server_forward(params: List[dict], h: jax.Array,
+                   cfg: DNNConfig) -> jax.Array:
+    """s(h): logits over slice classes."""
+    return mlp_forward(params, h, cfg.activation, final_linear=True)
+
+
+def inverse_server_forward(params: List[dict], y_onehot: jax.Array,
+                           cfg: DNNConfig) -> jax.Array:
+    """s⁻¹(Y): label → split-layer feature space."""
+    return mlp_forward(params, y_onehot, cfg.activation, final_linear=True)
+
+
+def full_forward(client: List[dict], server: List[dict], x: jax.Array,
+                 cfg: DNNConfig) -> jax.Array:
+    return server_forward(server, client_forward(client, x, cfg), cfg)
+
+
+def param_count(layers: List[dict]) -> int:
+    return sum(int(p["w"].size + p["b"].size) for p in layers)
+
+
+def param_bytes(layers: List[dict]) -> int:
+    return sum(int(p["w"].size + p["b"].size) * 4 for p in layers)

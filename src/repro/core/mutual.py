@@ -1,0 +1,44 @@
+"""Mutual-learning KL objectives (paper eq. 5).
+
+The paper's convention: D_KL(x ‖ y) = Σ y·log(y/x), i.e. the SECOND argument
+is the (stop-gradient) target distribution.  Both sides exchange roles:
+
+    client:  min_{w_C} D_KL( c(X) ‖ sg[s⁻¹(Y)] )
+    server:  min_{w_S} D_KL( s⁻¹(Y) ‖ sg[c(X)] )
+
+Split-layer activations are turned into distributions with a temperature
+softmax.  The fused Pallas kernel (repro.kernels.kl_mutual) computes the same
+quantity on TPU; this module is the reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def feature_distribution(h: jax.Array, temperature: float = 1.0) -> jax.Array:
+    return jax.nn.softmax(h.astype(jnp.float32) / temperature, axis=-1)
+
+
+def kl_paper(x_logits: jax.Array, y_logits: jax.Array,
+             temperature: float = 1.0) -> jax.Array:
+    """D_KL(x ‖ y) = Σ y log(y/x), y = target (paper's order).  Mean over batch."""
+    logp_x = jax.nn.log_softmax(x_logits.astype(jnp.float32) / temperature, -1)
+    logp_y = jax.nn.log_softmax(
+        jax.lax.stop_gradient(y_logits).astype(jnp.float32) / temperature, -1)
+    p_y = jnp.exp(logp_y)
+    return jnp.mean(jnp.sum(p_y * (logp_y - logp_x), axis=-1))
+
+
+def client_loss(c_feat: jax.Array, inv_feat: jax.Array,
+                temperature: float = 1.0) -> jax.Array:
+    """f_C = D_KL(c(X) ‖ s⁻¹(Y)): optimize the client to match the inverse
+    model's label embedding."""
+    return kl_paper(c_feat, inv_feat, temperature)
+
+
+def server_loss(inv_feat: jax.Array, c_feat: jax.Array,
+                temperature: float = 1.0) -> jax.Array:
+    """f_S = D_KL(s⁻¹(Y) ‖ c(X)): optimize the inverse model to match the
+    client's smashed data."""
+    return kl_paper(inv_feat, c_feat, temperature)

@@ -1,0 +1,25 @@
+"""Shared kernel plumbing.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling); on this
+CPU-only container they run with ``interpret=True``, which executes the
+kernel body in Python for bit-accurate validation against the ref oracles.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(x, axis: int, multiple: int, value=0.0):
+    """Pad `axis` up to a multiple; returns (padded, original_size)."""
+    import jax.numpy as jnp
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value), n

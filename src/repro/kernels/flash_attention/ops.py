@@ -1,0 +1,33 @@
+"""jit'd public wrapper for flash attention (pads seq to block multiples)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, use_interpret
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "bq", "bk", "scale"))
+def flash_attention(q, k, v, *, scale=None, causal: bool = True, window=None,
+                    bq: int = 128, bk: int = 128):
+    """q: (B, H, S, D); k, v: (B, KV, S, D).  Causal only (padded KV tail is
+    masked by causality)."""
+    assert causal, "this kernel is specialised for the causal decode path"
+    B, H, S, D = q.shape
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    bq = min(bq, S) if S % min(bq, S) == 0 else min(bq, S)
+    blk = min(bq, bk, S)
+    while S % blk:
+        blk //= 2
+    q, _ = pad_to(q, 2, blk)
+    k, _ = pad_to(k, 2, blk)
+    v, _ = pad_to(v, 2, blk)
+    out = flash_attention_pallas(q, k, v, scale=scale, causal=causal,
+                                 window=window, bq=blk, bk=blk,
+                                 interpret=use_interpret())
+    return out[:, :, :S]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: causal GQA attention with optional sliding window."""
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, scale, causal=True, window=None):
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    group = H // KV
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

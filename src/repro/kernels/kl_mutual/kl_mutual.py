@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: fused softmax-KL mutual-learning loss (paper eq. 5).
+
+Computes the per-row D_KL(x ‖ y) = Σ p_y (log p_y − log p_x) with p = softmax
+of temperature-scaled logits, in ONE VMEM-resident pass per row block:
+both stable log-softmaxes (max + logsumexp) and the KL contraction are fused,
+so HBM traffic is exactly one read of each logits block + one (bq,)-vector
+write — versus 5 materialised intermediates on the unfused path.
+
+BlockSpec: rows tiled (bq, d) with the full feature dim resident in VMEM
+(split-layer widths here are ≤ a few thousand — trivially fits).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kl_kernel(x_ref, y_ref, o_ref, *, inv_temp: float):
+    x = x_ref[...].astype(jnp.float32) * inv_temp
+    y = y_ref[...].astype(jnp.float32) * inv_temp
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    y = y - jnp.max(y, axis=-1, keepdims=True)
+    logp_x = x - jnp.log(jnp.sum(jnp.exp(x), axis=-1, keepdims=True))
+    logp_y = y - jnp.log(jnp.sum(jnp.exp(y), axis=-1, keepdims=True))
+    p_y = jnp.exp(logp_y)
+    o_ref[...] = jnp.sum(p_y * (logp_y - logp_x), axis=-1)
+
+
+def kl_rows_pallas(x_logits: jax.Array, y_logits: jax.Array, *,
+                   temperature: float = 1.0, bq: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """Per-row KL; (n, d) -> (n,).  n must be a multiple of bq (ops pads)."""
+    n, d = x_logits.shape
+    grid = (n // bq,)
+    return pl.pallas_call(
+        functools.partial(_kl_kernel, inv_temp=1.0 / temperature),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bq, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bq, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bq,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(x_logits, y_logits)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused KL kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def kl_rows(x_logits, y_logits, temperature: float = 1.0):
+    logp_x = jax.nn.log_softmax(x_logits.astype(jnp.float32) / temperature, -1)
+    logp_y = jax.nn.log_softmax(y_logits.astype(jnp.float32) / temperature, -1)
+    p_y = jnp.exp(logp_y)
+    return jnp.sum(p_y * (logp_y - logp_x), axis=-1)

@@ -1,0 +1,28 @@
+"""jit'd public wrapper for the chunked Mamba2 SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, use_interpret
+from repro.kernels.mamba2_scan.mamba2_scan import mamba2_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mamba2_scan(decay, dt, B, C, x, *, chunk: int = 128):
+    """Chunked SSD scan; pads L to the chunk size (decay=1, dt=0 padding is
+    exact — padded steps leave state and outputs untouched)."""
+    L = decay.shape[1]
+    chunk = min(chunk, L) if L % min(chunk, L) == 0 else min(chunk, L)
+    while L % chunk:
+        chunk //= 2
+    decay, _ = pad_to(decay, 1, chunk, value=1.0)
+    dt, _ = pad_to(dt, 1, chunk, value=0.0)
+    B, _ = pad_to(B, 1, chunk)
+    C, _ = pad_to(C, 1, chunk)
+    x, _ = pad_to(x, 1, chunk)
+    y = mamba2_scan_pallas(decay, dt, B, C, x, chunk=chunk,
+                           interpret=use_interpret())
+    return y[:, :L]

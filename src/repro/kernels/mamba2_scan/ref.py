@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: sequential Mamba2 SSD recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def mamba2_scan(decay, dt, B, C, x):
+    """decay, dt: (b, L, nh); B, C: (b, L, N); x: (b, L, nh, P)."""
+    b, L, nh = decay.shape
+    N, P = B.shape[-1], x.shape[-1]
+
+    def step(h, inp):
+        dec_t, dt_t, B_t, C_t, x_t = inp
+        h = (h * dec_t[:, :, None, None]
+             + (dt_t[:, :, None] * B_t[:, None, :])[..., None]
+             * x_t[:, :, None, :])
+        y_t = jnp.einsum("bn,bhnp->bhp", C_t, h)
+        return h, y_t
+
+    h0 = jnp.zeros((b, nh, N, P), jnp.float32)
+    xs = (jnp.moveaxis(decay.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(x.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

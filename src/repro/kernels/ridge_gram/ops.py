@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the ridge Gram kernel (pads to block multiples)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, use_interpret
+from repro.kernels.ridge_gram.ridge_gram import gram_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gram(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+         bk: int = 512) -> jax.Array:
+    """G = XᵀY with MXU-blocked accumulation.  x: (n, d1), y: (n, d2)."""
+    n = x.shape[0]
+    bk = min(bk, max(128, n))
+    x, d1 = pad_to(x, 1, bm)
+    y, d2 = pad_to(y, 1, bn)
+    x, _ = pad_to(x, 0, bk)
+    y, _ = pad_to(y, 0, bk)
+    g = gram_pallas(x, y, bm=bm, bn=bn, bk=bk, interpret=use_interpret())
+    return g[:d1, :d2]

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the RWKV6 WKV kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_to, use_interpret
+from repro.kernels.rwkv6_wkv.rwkv6_wkv import rwkv6_wkv_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_wkv(r, k, v, w, u, *, chunk: int = 128):
+    """Padding with k=0, w=1 is exact (state untouched, outputs sliced)."""
+    L = r.shape[1]
+    chunk = min(chunk, L)
+    while L % chunk:
+        chunk //= 2
+    r, _ = pad_to(r, 1, chunk)
+    k, _ = pad_to(k, 1, chunk)
+    v, _ = pad_to(v, 1, chunk)
+    w, _ = pad_to(w, 1, chunk, value=1.0)
+    y = rwkv6_wkv_pallas(r, k, v, w, u, chunk=chunk,
+                         interpret=use_interpret())
+    return y[:, :L]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: sequential RWKV6 WKV recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_wkv(r, k, v, w, u):
+    """r, k, v, w: (b, L, nh, P); u: (nh, P)."""
+    b, L, nh, P = r.shape
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                  # (b, nh, P)
+        rk = jnp.sum(r_t * u * k_t, axis=-1)
+        y = jnp.einsum("bhp,bhpq->bhq", r_t, S) + rk[..., None] * v_t
+        S = S * w_t[..., None] + k_t[..., None] * v_t[..., None, :]
+        return S, y
+
+    S0 = jnp.zeros((b, nh, P, P), jnp.float32)
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (r, k, v, w))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1)

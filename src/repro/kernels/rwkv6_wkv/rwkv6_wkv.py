@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: RWKV6 WKV recurrence with data-dependent decay.
+
+    y_t = r_tᵀ S_{t-1} + (r_t · (u ∘ k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+Hardware note (DESIGN.md §3): RWKV6's decay is per-KEY-CHANNEL and
+time-varying, so the SSD-style exp(l_t − l_s) chunk matmul would need a
+(Q, Q, P) pairwise-decay tensor — no clean MXU mapping.  The TPU-idiomatic
+compromise: tile (Q, P) blocks of r/k/v/w into VMEM, run the recurrence as
+an in-register fori_loop over the chunk (VPU matvec per step), and carry the
+(P, P) state in VMEM scratch across chunks.  HBM traffic is one pass over
+the inputs — the memory-bound optimum — even though compute stays on the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, S_ref, *, Q: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        S_ref[...] = jnp.zeros_like(S_ref)
+
+    r = r_ref[0, :, 0].astype(jnp.float32)    # (Q, P)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    w = w_ref[0, :, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (P,)
+    P = r.shape[-1]
+
+    def step(t, carry):
+        S, ys = carry
+        rt = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)[0]
+        kt = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)[0]
+        vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)[0]
+        wt = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)[0]
+        y = rt @ S + jnp.sum(rt * u * kt) * vt
+        S = S * wt[:, None] + kt[:, None] * vt[None, :]
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y[None], t, 0)
+        return S, ys
+
+    S, ys = jax.lax.fori_loop(0, Q, step,
+                              (S_ref[...], jnp.zeros((Q, P), jnp.float32)))
+    S_ref[...] = S
+    o_ref[0, :, 0] = ys.astype(o_ref.dtype)
+
+
+def rwkv6_wkv_pallas(r, k, v, w, u, *, chunk: int = 128,
+                     interpret: bool = False):
+    """r, k, v, w: (b, L, nh, P); u: (nh, P) -> y (b, L, nh, P) float32."""
+    b, L, nh, P = r.shape
+    grid = (b, nh, L // chunk)
+    spec = pl.BlockSpec((1, chunk, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0))
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, Q=chunk),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, P), lambda bi, hi, ci: (hi, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, L, nh, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, P), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

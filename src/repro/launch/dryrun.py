@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+combination on the production mesh, prove it fits, and extract the roofline
+terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+MUST be run as its own process (the XLA_FLAGS line above precedes every jax
+import — jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results are cached as JSON under benchmarks/results/dryrun/ so reruns skip
+completed combos.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_cache, abstract_params, batch_specs,
+                                build_for)
+from repro.roofline.analysis import analyze, model_flops_estimate
+from repro.runtime.steps import (default_optimizer, make_prefill_step,
+                                 make_serve_step, make_train_step)
+from repro.sharding.partition import (batch_shardings, cache_shardings,
+                                      params_shardings, replicated)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+ARCHS = [a for a in list_configs() if a != "splitme-dnn10"]
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                overrides: dict | None = None):
+    """Lower + compile one (arch, shape, mesh). Returns result dict."""
+    overrides = overrides or {}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    model, shape = build_for(arch, shape_name,
+                             remat=overrides.get("remat", True),
+                             remat_policy=overrides.get("remat_policy"),
+                             unroll=overrides.get("unroll", True))
+    cfg = model.cfg
+    t0 = time.time()
+
+    params_abs = abstract_params(model)
+    p_sh = params_shardings(params_abs, mesh,
+                            fsdp=overrides.get("fsdp", True))
+
+    if shape.kind == "train":
+        opt_name = overrides.get("optimizer") or default_optimizer(cfg)
+        _, train_step = make_train_step(model, optimizer=opt_name)
+        from repro.optim.optimizers import get_optimizer
+        opt_init, _ = get_optimizer(opt_name, 3e-4)
+        opt_abs = jax.eval_shape(opt_init, params_abs)
+        o_sh = jax.tree.map(
+            lambda _: None, opt_abs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        # opt state mirrors params -> reuse param rules by shape
+        from repro.sharding.partition import params_shardings as ps
+        o_sh = ps(opt_abs, mesh, fsdp=overrides.get("fsdp", True))
+        batch = batch_specs(cfg, shape)
+        b_sh = batch_shardings(batch, mesh)
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = jax.jit(train_step,
+                     in_shardings=(p_sh, o_sh, replicated(mesh), b_sh),
+                     out_shardings=(p_sh, o_sh, replicated(mesh),
+                                    replicated(mesh)))
+        with mesh:
+            lowered = fn.lower(params_abs, opt_abs, step_abs, batch)
+    elif shape.kind == "prefill":
+        prefill = make_prefill_step(model)
+        batch = batch_specs(cfg, shape)
+        b_sh = batch_shardings(batch, mesh)
+        fn = jax.jit(prefill, in_shardings=(p_sh, b_sh),
+                     out_shardings=replicated(mesh))
+        with mesh:
+            lowered = fn.lower(params_abs, batch)
+    else:  # decode
+        serve = make_serve_step(model)
+        cache_abs = abstract_cache(model, shape, params_abs)
+        c_sh = cache_shardings(cache_abs, mesh)
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        t_sh = batch_shardings({"t": tok}, mesh)["t"]
+        fn = jax.jit(serve, in_shardings=(p_sh, t_sh, c_sh),
+                     out_shardings=(t_sh, c_sh))
+        with mesh:
+            lowered = fn.lower(params_abs, tok, cache_abs)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    memstats = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    roof = analyze(arch, shape_name, mesh_name, chips, cost, hlo,
+                   model_flops=model_flops_estimate(cfg, shape),
+                   memory_stats=memstats)
+    result = roof.to_dict()
+    result.update(
+        ok=True, lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        optimizer=(overrides.get("optimizer")
+                   or (default_optimizer(cfg) if shape.kind == "train" else None)),
+        n_params=cfg.n_params(), n_active=cfg.n_active_params(),
+        hlo_bytes=len(hlo), overrides={k: v for k, v in overrides.items()},
+        per_device_bytes=dict(
+            argument=float(memstats.argument_size_in_bytes),
+            output=float(memstats.output_size_in_bytes),
+            temp=float(memstats.temp_size_in_bytes)))
+    return result
+
+
+def run_combo(arch, shape_name, multi_pod, force=False, overrides=None,
+              tag=""):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out = RESULTS_DIR / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+    if out.exists() and not force:
+        print(f"[skip] {out.name}")
+        return json.loads(out.read_text())
+    print(f"[dryrun] {arch} × {shape_name} × {mesh_name} …", flush=True)
+    try:
+        result = lower_combo(arch, shape_name, multi_pod, overrides)
+        print(f"  ok: compute={result['compute_s']:.3e}s "
+              f"memory={result['memory_s']:.3e}s "
+              f"collective={result['collective_s']:.3e}s "
+              f"dominant={result['dominant']} "
+              f"(lower {result['lower_s']}s compile {result['compile_s']}s)",
+              flush=True)
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        result = dict(ok=False, arch=arch, shape=shape_name, mesh=mesh_name,
+                      error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        print(f"  FAIL: {result['error'][:200]}", flush=True)
+    out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCHS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_combo(arch, shape, mp, force=args.force)
+                n_fail += 0 if r.get("ok") else 1
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

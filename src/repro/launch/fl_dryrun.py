@@ -1,0 +1,115 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run of the paper's OWN technique on the production mesh.
+
+Lowers one global round of (a) SplitMe and (b) vanilla SFL — the paper's
+baseline — with M clients sharded over the mesh data axes, for E ∈ {1, 10},
+and compares collective traffic.  The paper's claim ("reduce the
+multiple-communication-per-round level of SFL to one-communication-per-
+round") becomes a structural property of the lowered HLO:
+
+    SplitMe  : collective bytes CONSTANT in E (one psum per round + Step-4
+               Gram psum)
+    vanilla  : collective bytes ∝ E (two boundary permutes per local step)
+
+    PYTHONPATH=src python -m repro.launch.fl_dryrun [--multipod]
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.splitme_dnn import DNN10
+from repro.core import dnn
+from repro.core.distributed import (make_distributed_inversion,
+                                    make_sfl_round, make_splitme_round)
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import parse_collectives
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+def lower_round(kind: str, mesh, M: int, n: int, E: int):
+    cfg = DNN10
+    SDS = jax.ShapeDtypeStruct
+    f32, i32 = jnp.float32, jnp.int32
+    w_c = jax.eval_shape(lambda: dnn.init_client(jax.random.PRNGKey(0), cfg))
+    key = SDS((2,), jnp.uint32)
+    if kind == "splitme":
+        fn = make_splitme_round(cfg, mesh, n_clients=M, samples_per_client=n,
+                                E=E, unroll_steps=True)
+        w_i = jax.eval_shape(
+            lambda: dnn.init_inverse_server(jax.random.PRNGKey(0), cfg))
+        args = (w_c, w_i, SDS((M, n, cfg.n_features), f32),
+                SDS((M, n, cfg.n_classes), f32), key)
+    elif kind == "sfl":
+        fn = make_sfl_round(cfg, mesh, n_clients=M, samples_per_client=n,
+                            E=E, unroll_steps=True)
+        w_s = jax.eval_shape(lambda: dnn.init_server(jax.random.PRNGKey(0),
+                                                     cfg))
+        args = (w_c, w_s, SDS((M, n, cfg.n_features), f32),
+                SDS((M, n), i32), key)
+    else:  # inversion (Step 4)
+        fn = make_distributed_inversion(cfg, mesh)
+        w_i = jax.eval_shape(
+            lambda: dnn.init_inverse_server(jax.random.PRNGKey(0), cfg))
+        d_split = dnn.client_dims(cfg)[-1]
+        args = (w_i, SDS((M, n, d_split), f32),
+                SDS((M, n, cfg.n_classes), f32))
+    with mesh:
+        compiled = jax.jit(fn).lower(*args).compile()
+    colls = parse_collectives(compiled.as_text())
+    return {
+        "collective_bytes": float(sum(c.result_bytes for c in colls)),
+        "collective_s": float(sum(c.wire_seconds for c in colls)),
+        "counts": {k: sum(1 for c in colls if c.kind == k)
+                   for k in {c.kind for c in colls}},
+        "flops": float(compiled.cost_analysis().get("flops", 0.0)),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--clients", type=int, default=512)
+    ap.add_argument("--samples", type=int, default=64)
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=args.multipod)
+    mesh_name = "2x16x16" if args.multipod else "16x16"
+    out = {"mesh": mesh_name, "clients": args.clients,
+           "samples_per_client": args.samples}
+    for kind in ("splitme", "sfl"):
+        for E in (1, 10):
+            t0 = time.time()
+            r = lower_round(kind, mesh, args.clients, args.samples, E)
+            out[f"{kind}_E{E}"] = r
+            print(f"{kind} E={E}: collective_bytes="
+                  f"{r['collective_bytes']:.3e} "
+                  f"({r['counts']}) [{time.time() - t0:.1f}s]", flush=True)
+    out["inversion"] = lower_round("inversion", mesh, args.clients,
+                                   args.samples, 1)
+    print(f"step4 inversion: collective_bytes="
+          f"{out['inversion']['collective_bytes']:.3e} "
+          f"({out['inversion']['counts']})")
+    # the paper's claim, as a structural assertion on the lowered HLO:
+    s1 = out["splitme_E1"]["collective_bytes"]
+    s10 = out["splitme_E10"]["collective_bytes"]
+    v1 = out["sfl_E1"]["collective_bytes"]
+    v10 = out["sfl_E10"]["collective_bytes"]
+    out["splitme_bytes_constant_in_E"] = bool(abs(s10 - s1) < 0.01 * s1 + 1e3)
+    out["sfl_bytes_scale_with_E"] = bool(v10 > 5 * v1 / 2)
+    print(f"SplitMe bytes E1->E10: {s1:.3e} -> {s10:.3e} (constant: "
+          f"{out['splitme_bytes_constant_in_E']})")
+    print(f"SFL bytes     E1->E10: {v1:.3e} -> {v10:.3e} (scales: "
+          f"{out['sfl_bytes_scale_with_E']})")
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"fl_dryrun_{mesh_name}.json").write_text(
+        json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

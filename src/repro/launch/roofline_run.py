@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline extraction pass (companion to dryrun.py).
+
+XLA's cost_analysis counts a while-loop body ONCE, so the full-config scan
+compiles (dryrun.py — the fits/lowers proof) under-report FLOPs / bytes /
+collectives by ~n_layers×.  Fully unrolling 61-layer models on one CPU core
+is intractable, so this pass measures the exact per-layer hardware cost by
+finite differencing two UNROLLED shallow variants at FULL width:
+
+    cost(L) ≈ cost(L1) + (L − L1) · [cost(L2) − cost(L1)] / (L2 − L1)
+
+L1/L2 are 1/2 layers (zamba: 1/2 groups of 6+shared; enc-dec scales both
+stacks).  Embedding/logits/optimizer overheads land in the base term;
+per-layer collectives land in the delta.  Results are merged with the
+full-config dry-run JSON (which contributes the memory_analysis and the
+compile proof) into <arch>__<shape>__<mesh>__roofline.json.
+
+    PYTHONPATH=src python -m repro.launch.roofline_run --all [--mesh both]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, get_config, list_configs
+from repro.launch.dryrun import ARCHS, RESULTS_DIR
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_cache, abstract_params, batch_specs,
+                                decode_window_for)
+from repro.models.transformer import build_model
+from repro.roofline.analysis import (analyze, model_flops_estimate,
+                                     parse_collectives)
+from repro.runtime.steps import (default_optimizer, make_prefill_step,
+                                 make_serve_step, make_train_step)
+from repro.sharding.partition import (batch_shardings, cache_shardings,
+                                      params_shardings, replicated)
+
+
+def _depth_unit(cfg):
+    """(unit_layers, n_units): the repeating depth unit."""
+    if cfg.family == "hybrid":
+        g = cfg.shared_attn_every
+        return g, cfg.n_layers // g
+    return 1, cfg.n_layers
+
+
+def _shallow(cfg, units: int):
+    unit, _ = _depth_unit(cfg)
+    kw = {"n_layers": unit * units}
+    if cfg.is_enc_dec:
+        kw["enc_layers"] = units
+        kw["n_layers"] = units
+    return dataclasses.replace(cfg, **kw)
+
+
+def _measure(cfg, shape, multi_pod: bool, overrides: dict):
+    """Compile one variant (unrolled) and return raw cost numbers."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg, remat=overrides.get("remat", True),
+                        remat_policy=overrides.get("remat_policy"),
+                        decode_window=decode_window_for(cfg, shape),
+                        unroll=True,
+                        moe_local_dispatch=overrides.get("moe_local", False))
+    params_abs = abstract_params(model)
+    fsdp = overrides.get("fsdp", True)
+    ep = overrides.get("expert_parallel", False)
+    dpm = overrides.get("dp_over_model", False)
+    if overrides.get("pure_dp"):
+        # replicate params entirely; batch spreads over ALL mesh axes
+        p_sh = jax.tree.map(lambda _: replicated(mesh), params_abs)
+    else:
+        p_sh = params_shardings(params_abs, mesh, fsdp=fsdp,
+                                expert_parallel=ep)
+    if shape.kind == "train":
+        opt_name = overrides.get("optimizer") or default_optimizer(cfg)
+        from repro.optim.optimizers import get_optimizer
+        _, train_step = make_train_step(
+            model, optimizer=opt_name,
+            grad_dtype=overrides.get("grad_dtype"))
+        if overrides.get("zero3"):
+            # ZeRO-3: params STORED row-sharded (in/out shardings) but
+            # GATHERED for compute — one weight all-gather per step instead
+            # of per-matmul partial-sum activation all-reduces.
+            compute_sh = params_shardings(params_abs, mesh, fsdp=False,
+                                          expert_parallel=ep)
+            inner = train_step
+
+            def train_step(p, o, st, b):  # noqa: F811
+                p = jax.lax.with_sharding_constraint(p, compute_sh)
+                return inner(p, o, st, b)
+        opt_init, _ = get_optimizer(opt_name, 3e-4)
+        opt_abs = jax.eval_shape(opt_init, params_abs)
+        if overrides.get("pure_dp"):
+            o_sh = jax.tree.map(lambda _: replicated(mesh), opt_abs)
+        else:
+            o_sh = params_shardings(opt_abs, mesh, fsdp=fsdp,
+                                    expert_parallel=ep)
+        batch = batch_specs(cfg, shape)
+        b_sh = batch_shardings(batch, mesh, dp_over_model=dpm)
+        fn = jax.jit(train_step,
+                     in_shardings=(p_sh, o_sh, replicated(mesh), b_sh),
+                     out_shardings=(p_sh, o_sh, replicated(mesh),
+                                    replicated(mesh)))
+        with mesh:
+            compiled = fn.lower(params_abs, opt_abs,
+                                jax.ShapeDtypeStruct((), jnp.int32),
+                                batch).compile()
+    elif shape.kind == "prefill":
+        fn = jax.jit(make_prefill_step(model),
+                     in_shardings=(p_sh,
+                                   batch_shardings(batch_specs(cfg, shape),
+                                                   mesh, dp_over_model=dpm)),
+                     out_shardings=replicated(mesh))
+        with mesh:
+            compiled = fn.lower(params_abs, batch_specs(cfg, shape)).compile()
+    else:
+        serve = make_serve_step(model)
+        cache_abs = abstract_cache(model, shape, params_abs)
+        c_sh = cache_shardings(cache_abs, mesh)
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        t_sh = batch_shardings({"t": tok}, mesh)["t"]
+        fn = jax.jit(serve, in_shardings=(p_sh, t_sh, c_sh),
+                     out_shardings=(t_sh, c_sh))
+        with mesh:
+            compiled = fn.lower(params_abs, tok, cache_abs).compile()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    kinds = {c.kind for c in colls}
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(sum(c.result_bytes for c in colls)),
+        "coll_s": float(sum(c.wire_seconds for c in colls)),
+        "coll_counts": {k: sum(1 for c in colls if c.kind == k)
+                        for k in kinds},
+        "coll_s_by_kind": {k: float(sum(c.wire_seconds for c in colls
+                                        if c.kind == k)) for k in kinds},
+    }
+
+
+def extrapolate(arch: str, shape_name: str, multi_pod: bool,
+                overrides: dict | None = None) -> dict:
+    overrides = overrides or {}
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    unit, n_units = _depth_unit(cfg)
+    t0 = time.time()
+    m1 = _measure(_shallow(cfg, 1), shape, multi_pod, overrides)
+    m2 = _measure(_shallow(cfg, 2), shape, multi_pod, overrides)
+    scale = n_units - 1
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes", "coll_s"):
+        out[k] = m1[k] + scale * (m2[k] - m1[k])
+    counts, by_kind = {}, {}
+    for k in set(m1["coll_counts"]) | set(m2["coll_counts"]):
+        c1, c2 = m1["coll_counts"].get(k, 0), m2["coll_counts"].get(k, 0)
+        counts[k] = c1 + scale * (c2 - c1)
+        s1 = m1["coll_s_by_kind"].get(k, 0.0)
+        s2 = m2["coll_s_by_kind"].get(k, 0.0)
+        by_kind[k] = s1 + scale * (s2 - s1)
+    out["coll_counts"] = counts
+    out["coll_s_by_kind"] = by_kind
+    out["measure_s"] = round(time.time() - t0, 1)
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, force=False,
+            overrides=None, tag=""):
+    from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    out_path = RESULTS_DIR / f"{arch}__{shape_name}__{mesh_name}{tag}__roofline.json"
+    if out_path.exists() and not force:
+        print(f"[skip] {out_path.name}")
+        return json.loads(out_path.read_text())
+    base_path = RESULTS_DIR / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+    base = json.loads(base_path.read_text()) if base_path.exists() else {}
+    print(f"[roofline] {arch} × {shape_name} × {mesh_name} …", flush=True)
+    try:
+        ex = extrapolate(arch, shape_name, multi_pod, overrides)
+        cfg = get_config(arch)
+        shape = INPUT_SHAPES[shape_name]
+        result = {
+            "ok": True, "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "chips": 512 if multi_pod else 256,
+            "flops_per_device": ex["flops"],
+            "bytes_per_device": ex["bytes"],
+            "collective_bytes": ex["coll_bytes"],
+            "compute_s": ex["flops"] / PEAK_FLOPS_BF16,
+            "memory_s": ex["bytes"] / HBM_BW,
+            "collective_s": ex["coll_s"],
+            "collective_counts": ex["coll_counts"],
+            "collective_s_by_kind": ex.get("coll_s_by_kind", {}),
+            "model_flops": model_flops_estimate(cfg, shape),
+            "measure_s": ex["measure_s"],
+            "method": "unrolled 1/2-unit finite difference",
+            "full_compile": {k: base.get(k) for k in
+                             ("compile_s", "per_device_bytes", "optimizer")},
+        }
+        terms = {"compute": result["compute_s"], "memory": result["memory_s"],
+                 "collective": result["collective_s"]}
+        result["dominant"] = max(terms, key=terms.get)
+        result["overrides"] = overrides or {}
+        tot = result["flops_per_device"] * result["chips"]
+        result["useful_flops_ratio"] = (result["model_flops"] / tot
+                                        if tot else 0.0)
+        print(f"  ok: compute={result['compute_s']:.3e}s "
+              f"memory={result['memory_s']:.3e}s "
+              f"collective={result['collective_s']:.3e}s "
+              f"dominant={result['dominant']} useful="
+              f"{result['useful_flops_ratio']:.3f} "
+              f"({ex['measure_s']}s)", flush=True)
+    except Exception as e:  # noqa: BLE001
+        result = dict(ok=False, arch=arch, shape=shape_name, mesh=mesh_name,
+                      error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        print(f"  FAIL: {result['error'][:200]}", flush=True)
+    out_path.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for hillclimb variants")
+    ap.add_argument("--overrides", default="{}",
+                    help="JSON dict, e.g. '{\"expert_parallel\": true}'")
+    args = ap.parse_args()
+    overrides = json.loads(args.overrides)
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = (list(INPUT_SHAPES) if (args.all or args.shape is None)
+              else [args.shape])
+    meshes = {"single": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_one(arch, shape, mp, force=args.force,
+                            overrides=overrides, tag=args.tag)
+                n_fail += 0 if r.get("ok") else 1
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

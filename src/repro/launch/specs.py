@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(arch, shape)`` returns the abstract batch for train/prefill
+shapes; decode shapes additionally need the abstract cache, built with
+``jax.eval_shape`` over ``model.init_cache`` (zero FLOPs, zero bytes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ArchConfig, InputShape, get_config
+from repro.models.transformer import Model, build_model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def decode_window_for(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """long_500k must be sub-quadratic: ring-buffer window for attention
+    archs (DESIGN.md §4); other decode shapes keep the full cache."""
+    if shape.name == "long_500k":
+        return cfg.sliding_window
+    return None
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Abstract train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend and not cfg.is_enc_dec:
+        # VLM: [patch-prefix ; tokens] fills the seq budget
+        n_tok = S - cfg.frontend_positions
+        return {"tokens": SDS((B, n_tok), jnp.int32),
+                "embeds": SDS((B, cfg.frontend_positions, cfg.d_model), dt)}
+    if cfg.is_enc_dec:
+        # audio: encoder frames (stub frontend) + decoder tokens of seq_len
+        return {"tokens": SDS((B, S), jnp.int32),
+                "embeds": SDS((B, cfg.frontend_positions, cfg.d_model), dt)}
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_cache(model: Model, shape: InputShape, params_abs):
+    cfg = model.cfg
+    window = decode_window_for(cfg, shape)
+    fn = functools.partial(model.init_cache, batch=shape.global_batch,
+                           prefill_len=shape.seq_len)
+    return jax.eval_shape(lambda p: fn(p), params_abs)
+
+
+def build_for(arch: str, shape_name: str, **model_kw) -> Tuple[Model, InputShape]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    model = build_model(cfg, decode_window=decode_window_for(cfg, shape),
+                        **model_kw)
+    return model, shape

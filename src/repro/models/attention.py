@@ -1,0 +1,164 @@
+"""GQA / MQA / MHA attention with RoPE, qk-norm, sliding windows and a
+ring-buffer KV cache for decode.
+
+Shapes: activations are (batch, seq, d_model); caches are
+(batch, window, n_kv_heads, head_dim) ring buffers so a 500k-token decode
+carries only ``min(seq_len, sliding_window)`` KV entries (the sub-quadratic
+variant required for ``long_500k`` on attention archs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qk_norm: bool, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _sdpa(q, k, v, mask):
+    """q: (b,s,h,hd)  k,v: (b,t,kv,hd)  mask: (b,1,s,t) or (1,1,s,t)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    q = q.reshape(b, s, kv, groups, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    scores = scores + jnp.where(mask[:, :, None], 0.0, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(v.dtype)
+
+
+def attention(params: dict, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, theta: float, qk_norm: bool = False,
+              causal: bool = True, window: Optional[int] = None,
+              positions: Optional[jax.Array] = None,
+              memory: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence attention (training / prefill).  ``memory`` switches to
+    cross-attention (no RoPE/causality on memory, enc-dec decoder use)."""
+    b, s, _ = x.shape
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)
+    src = memory if memory is not None else x
+    t = src.shape[1]
+    k = _split_heads(src @ params["wk"], n_kv_heads, head_dim)
+    v = _split_heads(src @ params["wv"], n_kv_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if memory is None:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+        qi = positions[:, :, None]          # (b,s,1)
+        ki = positions[:, None, :]          # (b,1,t)
+        mask = ki <= qi if causal else jnp.ones((1, s, t), bool)
+        if window is not None:
+            mask = mask & (ki > qi - window)
+        mask = mask[:, None]                 # (b,1,s,t)
+    else:
+        mask = jnp.ones((1, 1, s, t), bool)
+    out = _sdpa(q, k, v, mask)
+    return out.reshape(b, s, n_heads * head_dim) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path: ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (b, window, n_kv, hd)
+    v: jax.Array          # (b, window, n_kv, hd)
+    pos: jax.Array        # (window,) absolute position of each slot, -1 empty
+    index: jax.Array      # scalar int32: next write offset (mod window)
+
+
+def init_kv_cache(batch: int, window: int, n_kv_heads: int, head_dim: int,
+                  dtype, prefill_len: int = 0) -> KVCache:
+    """An (optionally pre-filled-to-`prefill_len`) ring-buffer cache."""
+    k = jnp.zeros((batch, window, n_kv_heads, head_dim), dtype)
+    v = jnp.zeros((batch, window, n_kv_heads, head_dim), dtype)
+    if prefill_len:
+        # slots [0, min(prefill, window)) hold the last prefill positions
+        n = min(prefill_len, window)
+        pos = jnp.where(jnp.arange(window) < n,
+                        prefill_len - n + jnp.arange(window), -1)
+        idx = jnp.asarray(n % window, jnp.int32)
+    else:
+        pos = jnp.full((window,), -1, jnp.int32)
+        idx = jnp.asarray(0, jnp.int32)
+    return KVCache(k, v, pos.astype(jnp.int32), idx)
+
+
+def decode_attention(params: dict, x: jax.Array, cache: KVCache, *,
+                     n_heads: int, n_kv_heads: int, head_dim: int,
+                     theta: float, qk_norm: bool = False,
+                     position: Optional[jax.Array] = None,
+                     window: Optional[int] = None):
+    """One-token decode.  x: (b, 1, d_model).  Returns (y, new_cache)."""
+    b = x.shape[0]
+    if position is None:
+        position = jnp.max(cache.pos) + 1
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)
+    k = _split_heads(x @ params["wk"], n_kv_heads, head_dim)
+    v = _split_heads(x @ params["wv"], n_kv_heads, head_dim)
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    pos_b = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b, 1))
+    q = apply_rope(q, pos_b, theta)
+    k = apply_rope(k, pos_b, theta)
+    # ring-buffer write
+    W = cache.k.shape[1]
+    slot = cache.index % W
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, jnp.asarray(position, jnp.int32)[None], slot, axis=0)
+    valid = new_pos >= 0
+    if window is not None:
+        valid = valid & (new_pos > position - window)
+    mask = valid[None, None, None, :]        # (1,1,1,W)
+    out = _sdpa(q, new_k, new_v, mask)
+    y = out.reshape(b, 1, n_heads * head_dim) @ params["wo"]
+    return y, KVCache(new_k, new_v, new_pos, cache.index + 1)
+
+
+def cross_attention_kv(params: dict, memory: jax.Array, *, n_kv_heads: int,
+                       head_dim: int):
+    """Precompute cross-attention K/V from encoder memory (enc-dec decode)."""
+    k = _split_heads(memory @ params["wk"], n_kv_heads, head_dim)
+    v = _split_heads(memory @ params["wv"], n_kv_heads, head_dim)
+    return k, v
+
+
+def decode_cross_attention(params: dict, x: jax.Array, k: jax.Array,
+                           v: jax.Array, *, n_heads: int, head_dim: int):
+    b = x.shape[0]
+    q = _split_heads(x @ params["wq"], n_heads, head_dim)
+    mask = jnp.ones((1, 1, 1, k.shape[1]), bool)
+    out = _sdpa(q, k, v, mask)
+    return out.reshape(b, 1, n_heads * head_dim) @ params["wo"]

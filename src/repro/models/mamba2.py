@@ -1,0 +1,147 @@
+"""Mamba2 (SSD) block — used by zamba2's backbone [arXiv:2411.15242].
+
+State-space recurrence per head (head_dim P, state N):
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t ⊗ x_t        (N×P outer product)
+    y_t = C_t · h_t + D · x_t
+with a depthwise causal conv in front of (x, B, C) and a gated RMSNorm before
+out_proj.  The pure-JAX path scans the sequence; the Pallas chunked kernel
+(`repro.kernels.mamba2_scan`) is the TPU hot-path for training.
+
+Decode carries O(1) state: (conv_state, ssm_state) — this is why zamba2 runs
+`long_500k` without a KV cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.common import dense_init, rms_norm
+
+
+def init_mamba2(key, d_model: int, s: SSMConfig, dtype) -> dict:
+    d_in = s.expand * d_model
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_in + 2 * s.state_dim + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_kernel, conv_ch), jnp.float32)
+                   * (1.0 / math.sqrt(s.conv_kernel))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ks[2], d_in, d_model, dtype),
+    }
+
+
+def _split_proj(proj, d_in, N, nh):
+    z = proj[..., :d_in]
+    xc = proj[..., d_in:2 * d_in]
+    B = proj[..., 2 * d_in:2 * d_in + N]
+    C = proj[..., 2 * d_in + N:2 * d_in + 2 * N]
+    dt = proj[..., 2 * d_in + 2 * N:]
+    return z, xc, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """x: (b, s, ch); depthwise causal conv, kernel K."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(params: dict, x: jax.Array, s: SSMConfig,
+                   use_kernel: bool = False) -> jax.Array:
+    b, L, d_model = x.shape
+    d_in = s.expand * d_model
+    nh = d_in // s.head_dim
+    N, P = s.state_dim, s.head_dim
+    proj = x @ params["w_in"]
+    z, xc, B, C, dt = _split_proj(proj, d_in, N, nh)
+    conv_in = jnp.concatenate([xc, B, C], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xc, B, C = (conv_out[..., :d_in], conv_out[..., d_in:d_in + N],
+                conv_out[..., d_in + N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,L,nh)
+    A = -jnp.exp(params["A_log"])                                     # (nh,)
+    xh = xc.reshape(b, L, nh, P).astype(jnp.float32)
+    decay = jnp.exp(A * dt)                                           # (b,L,nh)
+
+    if use_kernel:
+        from repro.kernels.mamba2_scan import ops as mk
+        y = mk.mamba2_scan(decay, dt, B.astype(jnp.float32),
+                           C.astype(jnp.float32), xh)
+    else:
+        def step(h, inp):
+            dec_t, dt_t, B_t, C_t, x_t = inp
+            # h: (b, nh, N, P)
+            h = (h * dec_t[:, :, None, None]
+                 + (dt_t[:, :, None] * B_t[:, None, :])[..., None]
+                 * x_t[:, :, None, :])
+            y_t = jnp.einsum("bn,bhnp->bhp", C_t, h)
+            return h, y_t
+        h0 = jnp.zeros((b, nh, N, P), jnp.float32)
+        xs = (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(dt, 1, 0),
+              jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+              jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+              jnp.moveaxis(xh, 1, 0))
+        _, ys = jax.lax.scan(step, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1)                                    # (b,L,nh,P)
+
+    y = y + params["D"][:, None] * xh
+    y = y.reshape(b, L, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return y @ params["w_out"]
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (b, K-1, conv_ch) last inputs
+    ssm: jax.Array    # (b, nh, N, P) float32
+
+
+def init_mamba_cache(batch: int, d_model: int, s: SSMConfig, dtype) -> MambaCache:
+    d_in = s.expand * d_model
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim
+    return MambaCache(
+        jnp.zeros((batch, s.conv_kernel - 1, conv_ch), dtype),
+        jnp.zeros((batch, nh, s.state_dim, s.head_dim), jnp.float32))
+
+
+def mamba2_step(params: dict, x: jax.Array, cache: MambaCache,
+                s: SSMConfig) -> Tuple[jax.Array, MambaCache]:
+    """One-token decode.  x: (b, 1, d_model)."""
+    b, _, d_model = x.shape
+    d_in = s.expand * d_model
+    nh = d_in // s.head_dim
+    N, P = s.state_dim, s.head_dim
+    proj = x[:, 0] @ params["w_in"]
+    z, xc, B, C, dt = _split_proj(proj, d_in, N, nh)
+    conv_in = jnp.concatenate([xc, B, C], axis=-1)                # (b, ch)
+    window = jnp.concatenate([cache.conv, conv_in[:, None]], axis=1)  # (b,K,ch)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+        + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xc, B, C = (conv_out[..., :d_in], conv_out[..., d_in:d_in + N],
+                conv_out[..., d_in + N:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,nh)
+    A = -jnp.exp(params["A_log"])
+    xh = xc.reshape(b, nh, P).astype(jnp.float32)
+    dec = jnp.exp(A * dt)                                             # (b,nh)
+    h = (cache.ssm * dec[:, :, None, None]
+         + (dt[:, :, None] * B.astype(jnp.float32)[:, None, :])[..., None]
+         * xh[:, :, None, :])
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), h)
+    y = y + params["D"][:, None] * xh
+    y = y.reshape(b, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = (y @ params["w_out"])[:, None]
+    return out, MambaCache(window[:, 1:], h)

@@ -1,0 +1,135 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries go through a low-rank bottleneck (q_lora_rank); keys/values are
+compressed into a single latent c_kv (kv_lora_rank) plus one shared RoPE key
+per position.  The decode cache stores ONLY (c_kv, k_rope) — the latent — so
+the KV cache is (kv_lora_rank + rope_dim) per token instead of
+2*n_heads*head_dim: this is the paper's memory saving and it is what our
+ring-buffer carries.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.common import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def init_mla(key, d_model: int, n_heads: int, m: MLAConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": dense_init(ks[0], d_model, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "w_uq": dense_init(ks[1], m.q_lora_rank, n_heads * qk_head, dtype),
+        "w_dkv": dense_init(ks[2], d_model, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_ukv": dense_init(ks[3], m.kv_lora_rank,
+                            n_heads * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks[4], n_heads * m.v_head_dim, d_model, dtype),
+    }
+
+
+def _project(params, x, n_heads, m: MLAConfig, positions, theta):
+    """Returns per-head q (b,s,h,qk), latent c_kv (b,s,r), roped k_rope (b,s,rd)."""
+    b, s, _ = x.shape
+    q = rms_norm(x @ params["w_dq"], params["q_norm"]) @ params["w_uq"]
+    q = q.reshape(b, s, n_heads, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, theta)
+    dkv = x @ params["w_dkv"]
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, theta)[:, :, 0]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return q, c_kv, k_rope
+
+
+def _expand_kv(params, c_kv, n_heads, m: MLAConfig):
+    b, t = c_kv.shape[:2]
+    kv = (c_kv @ params["w_ukv"]).reshape(
+        b, t, n_heads, m.qk_nope_head_dim + m.v_head_dim)
+    return jnp.split(kv, [m.qk_nope_head_dim], axis=-1)  # k_nope, v
+
+
+def _mla_sdpa(q, k_nope, k_rope, v, mask, m: MLAConfig):
+    b, s, h, _ = q.shape
+    t = k_nope.shape[1]
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (b, t, h, m.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = scores + jnp.where(mask, 0.0, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def mla_attention(params: dict, x: jax.Array, *, n_heads: int, m: MLAConfig,
+                  theta: float, causal: bool = True,
+                  window: Optional[int] = None,
+                  positions: Optional[jax.Array] = None) -> jax.Array:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, c_kv, k_rope = _project(params, x, n_heads, m, positions, theta)
+    k_nope, v = _expand_kv(params, c_kv, n_heads, m)
+    qi, ki = positions[:, :, None], positions[:, None, :]
+    mask = ki <= qi if causal else jnp.ones((1, s, s), bool)
+    if window is not None:
+        mask = mask & (ki > qi - window)
+    out = _mla_sdpa(q, k_nope, k_rope, v, mask[:, None], m)
+    return out.reshape(b, s, -1) @ params["wo"]
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # (b, window, kv_lora_rank)   — the latent
+    k_rope: jax.Array     # (b, window, rope_dim)
+    pos: jax.Array        # (window,)
+    index: jax.Array
+
+
+def init_mla_cache(batch: int, window: int, m: MLAConfig, dtype,
+                   prefill_len: int = 0) -> MLACache:
+    if prefill_len:
+        n = min(prefill_len, window)
+        pos = jnp.where(jnp.arange(window) < n,
+                        prefill_len - n + jnp.arange(window), -1)
+        idx = jnp.asarray(n % window, jnp.int32)
+    else:
+        pos = jnp.full((window,), -1, jnp.int32)
+        idx = jnp.asarray(0, jnp.int32)
+    return MLACache(jnp.zeros((batch, window, m.kv_lora_rank), dtype),
+                    jnp.zeros((batch, window, m.qk_rope_head_dim), dtype),
+                    pos.astype(jnp.int32), idx)
+
+
+def decode_mla_attention(params: dict, x: jax.Array, cache: MLACache, *,
+                         n_heads: int, m: MLAConfig, theta: float,
+                         position: Optional[jax.Array] = None,
+                         window: Optional[int] = None):
+    b = x.shape[0]
+    if position is None:
+        position = jnp.max(cache.pos) + 1
+    pos_b = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (b, 1))
+    q, c_kv, k_rope = _project(params, x, n_heads, m, pos_b, theta)
+    W = cache.c_kv.shape[1]
+    slot = cache.index % W
+    new_ckv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_kv, slot, 1)
+    new_krope = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, k_rope, slot, 1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, jnp.asarray(position, jnp.int32)[None], slot, 0)
+    k_nope, v = _expand_kv(params, new_ckv, n_heads, m)
+    valid = new_pos >= 0
+    if window is not None:
+        valid = valid & (new_pos > position - window)
+    out = _mla_sdpa(q, k_nope, new_krope, v, valid[None, None, None], m)
+    y = out.reshape(b, 1, -1) @ params["wo"]
+    return y, MLACache(new_ckv, new_krope, new_pos, cache.index + 1)

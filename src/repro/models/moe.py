@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+TPU-native adaptation: instead of a dense one-hot dispatch tensor
+(tokens × experts × capacity — prohibitive at 32k tokens × 256 experts),
+tokens are argsorted by expert id and scattered into per-expert capacity
+buffers, giving FLOPs proportional to *active* experts
+(E × capacity ≈ tokens × top_k × capacity_factor).  Under pjit the expert
+dimension of the stacked weights is sharded on the `model` mesh axis, so the
+scatter/gather lowers to the expert-parallel all-to-all pattern.
+
+Aux losses: load-balance loss (DeepSeek-V3 style mean(gate_frac * route_frac))
+is returned for the trainer to add.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import dense_init, init_ffn, apply_ffn
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, activation: str, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    mult = 3 if activation == "swiglu" else 2
+
+    def expert_stack(k):
+        kk = jax.random.split(k, mult)
+        p = {}
+        names = (["w_gate", "w_up", "w_down"] if mult == 3 else
+                 ["w_up", "w_down"])
+        dims = ([(d_model, cfg.d_ff_expert)] * (mult - 1)
+                + [(cfg.d_ff_expert, d_model)])
+        for name, (di, do), k_i in zip(names, dims, kk):
+            init = jax.vmap(lambda kv: dense_init(kv, di, do, dtype))
+            p[name] = init(jax.random.split(k_i, cfg.n_experts))
+        return p
+
+    p = {"router": dense_init(ks[0], d_model, cfg.n_experts, jnp.float32),
+         "experts": expert_stack(ks[1])}
+    if cfg.n_shared:
+        p["shared"] = init_ffn(ks[2], d_model,
+                               cfg.n_shared * cfg.d_ff_expert, activation, dtype)
+    return p
+
+
+def _expert_ffn(experts: dict, buf: jax.Array, activation: str) -> jax.Array:
+    """buf: (E, C, d_model) -> (E, C, d_model); batched expert matmuls."""
+    if activation == "swiglu":
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, experts["w_gate"]))
+        h = g * jnp.einsum("ecd,edf->ecf", buf, experts["w_up"])
+    else:
+        h = jnp.einsum("ecd,edf->ecf", buf, experts["w_up"])
+        h = jnp.square(jax.nn.relu(h)) if activation == "squared_relu" else jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, experts["w_down"])
+
+
+def apply_moe(params: dict, x: jax.Array, cfg: MoEConfig,
+              activation: str, local_dispatch: bool = False
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (batch, seq, d_model).  Returns (y, aux_loss).
+
+    local_dispatch: route/sort/scatter PER EXAMPLE (vmap over batch) instead
+    of over the globally flattened token dim.  Capacity becomes per-example
+    (seq·top_k·cf/E); under pjit the whole dispatch then stays local to the
+    batch shard — the global variant materialises (b·s·top_k, d) sort/scatter
+    buffers that XLA must all-reduce across the data axis (§Perf hillclimb 1).
+    """
+    if local_dispatch and x.shape[0] > 1:
+        one = lambda xb: apply_moe(params, xb[None], cfg, activation, False)
+        y, aux = jax.vmap(one)(x)
+        return y[:, 0], jnp.mean(aux)
+    b, s, d = x.shape
+    T = b * s
+    xt = x.reshape(T, d)
+    logits = (xt @ params["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate, expert_idx = jax.lax.top_k(probs, cfg.top_k)           # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    E = cfg.n_experts
+    cap = int(max(1, (T * cfg.top_k * cfg.capacity_factor) // E))
+    # ---- sort-based dispatch ----
+    flat_e = expert_idx.reshape(-1)                              # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), cfg.top_k)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(flat_e, length=E)                      # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * cfg.top_k) - starts[se]                 # slot in expert
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, E * cap)              # overflow -> dropped row
+    buf = jnp.zeros((E * cap + 1, d), x.dtype).at[slot].set(xt[st])
+    y_buf = _expert_ffn(params["experts"], buf[:-1].reshape(E, cap, d),
+                        activation).reshape(E * cap, d)
+    y_tok = jnp.where(keep[:, None], y_buf[jnp.clip(slot, 0, E * cap - 1)], 0.0)
+    out = jnp.zeros((T, d), x.dtype).at[st].add(y_tok * sg[:, None].astype(x.dtype))
+
+    if "shared" in params:
+        out = out + apply_ffn(params["shared"], xt, activation)
+
+    # load-balance auxiliary loss (Switch/DeepSeek style)
+    route_frac = jnp.mean(
+        (jax.nn.one_hot(expert_idx, E).sum(1) > 0).astype(jnp.float32), axis=0)
+    gate_frac = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(route_frac * gate_frac)
+    return out.reshape(b, s, d), aux

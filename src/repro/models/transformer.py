@@ -1,0 +1,540 @@
+"""Unified model assembly for all assigned architecture families.
+
+One functional ``Model`` facade per :class:`ArchConfig`:
+
+    model = build_model(cfg)
+    params = model.init(key)                      # eval_shape-safe
+    logits, aux = model.forward(params, batch)    # train / prefill
+    cache  = model.init_cache(batch, prefill_len) # decode
+    logits, cache = model.decode_step(params, tokens, cache)
+
+Layer stacks are ``lax.scan`` over stacked params (compact HLO ⇒ fast
+512-device compiles) with optional remat on the layer body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba2, mla, moe, rwkv6
+from repro.models.common import (dense_init, embed_init, init_ffn, apply_ffn,
+                                 layer_norm, rms_norm)
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Any
+    forward: Any          # (params, batch) -> (logits, aux_loss)
+    init_cache: Any       # (params, batch, prefill_len) -> cache
+    decode_step: Any      # (params, tokens, cache) -> (logits, cache)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(key, cfg: ArchConfig, dt):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt),
+        "attn": attn.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.resolved_head_dim,
+                                    cfg.qk_norm, dt),
+        "ln2": jnp.ones((cfg.d_model,), dt),
+        "ffn": init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.activation, dt),
+    }
+
+
+def _apply_dense_block(p, x, cfg: ArchConfig, *, positions=None, causal=True,
+                       window=None):
+    h = attn.attention(p["attn"], rms_norm(x, p["ln1"]),
+                       n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                       head_dim=cfg.resolved_head_dim, theta=cfg.rope_theta,
+                       qk_norm=cfg.qk_norm, causal=causal, window=window,
+                       positions=positions)
+    x = x + h
+    return x + apply_ffn(p["ffn"], rms_norm(x, p["ln2"]), cfg.activation)
+
+
+def _init_moe_block(key, cfg: ArchConfig, dt):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), dt),
+         "ln2": jnp.ones((cfg.d_model,), dt),
+         "moe": moe.init_moe(k2, cfg.d_model, cfg.moe, cfg.activation, dt)}
+    if cfg.attention_kind == "mla":
+        p["attn"] = mla.init_mla(k1, cfg.d_model, cfg.n_heads, cfg.mla, dt)
+    else:
+        p["attn"] = attn.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.resolved_head_dim,
+                                        cfg.qk_norm, dt)
+    return p
+
+
+def _apply_moe_block(p, x, cfg: ArchConfig, *, positions=None, window=None,
+                     moe_local: bool = False):
+    xin = rms_norm(x, p["ln1"])
+    if cfg.attention_kind == "mla":
+        h = mla.mla_attention(p["attn"], xin, n_heads=cfg.n_heads, m=cfg.mla,
+                              theta=cfg.rope_theta, window=window,
+                              positions=positions)
+    else:
+        h = attn.attention(p["attn"], xin, n_heads=cfg.n_heads,
+                           n_kv_heads=cfg.n_kv_heads,
+                           head_dim=cfg.resolved_head_dim,
+                           theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                           window=window, positions=positions)
+    x = x + h
+    y, aux = moe.apply_moe(p["moe"], rms_norm(x, p["ln2"]), cfg.moe,
+                           cfg.activation, local_dispatch=moe_local)
+    return x + y, aux
+
+
+def _init_rwkv_block(key, cfg: ArchConfig, dt):
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dt), "ln1b": jnp.zeros((cfg.d_model,), dt),
+        "ln2": jnp.ones((cfg.d_model,), dt), "ln2b": jnp.zeros((cfg.d_model,), dt),
+        "tm": rwkv6.init_rwkv6(key, cfg.d_model, cfg.d_ff, cfg.ssm, dt),
+    }
+
+
+def _init_mamba_block(key, cfg: ArchConfig, dt):
+    return {"ln": jnp.ones((cfg.d_model,), dt),
+            "mix": mamba2.init_mamba2(key, cfg.d_model, cfg.ssm, dt)}
+
+
+# ---------------------------------------------------------------------------
+# Model builders per family
+# ---------------------------------------------------------------------------
+
+def _stacked(init_one, key, n):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+
+def _scan_layers(body, carry, xs, unroll: bool):
+    """lax.scan over stacked layer params, or a python-unrolled loop.
+
+    Unrolling matters for the dry-run roofline: XLA's cost_analysis counts a
+    while-loop body ONCE regardless of trip count, so scanned stacks would
+    under-report FLOPs/bytes/collectives by ~n_layers x.  The product path
+    keeps scan (compact HLO, fast compiles); launch/dryrun.py lowers with
+    unroll=True for honest hardware-cost accounting.
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *a: jnp.stack(a), *ys)
+
+
+def build_model(cfg: ArchConfig, *, remat: bool = True,
+                remat_policy: Optional[str] = None,
+                decode_window: Optional[int] = None,
+                unroll: bool = False,
+                moe_local_dispatch: bool = False) -> Model:
+    """``decode_window``: ring-buffer KV window for decode (None = full cache;
+    long_500k passes cfg.sliding_window to stay sub-quadratic)."""
+    dt = _dtype(cfg)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return _build_decoder(cfg, dt, "dense", remat, remat_policy, decode_window, unroll)
+    if fam == "moe":
+        return _build_decoder(cfg, dt, "moe", remat, remat_policy, decode_window, unroll, moe_local_dispatch)
+    if fam == "ssm":
+        return _build_rwkv(cfg, dt, remat, unroll)
+    if fam == "hybrid":
+        return _build_zamba(cfg, dt, remat, decode_window, unroll)
+    if fam == "audio":
+        return _build_encdec(cfg, dt, remat, decode_window, unroll)
+    raise ValueError(f"unsupported family {fam!r} for the transformer zoo")
+
+
+def _remat(fn, enabled, policy=None):
+    if not enabled:
+        return fn
+    pol = None
+    if policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=pol)
+
+
+def _embed_in(params, cfg, tokens, embeds):
+    x = params["embed"][tokens]
+    if cfg.frontend and embeds is not None:
+        pe = embeds.astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def _logits_out(params, cfg, x):
+    x = rms_norm(x, params["ln_f"])
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return x @ w
+
+
+# ----- dense / vlm / moe decoder ------------------------------------------
+
+def _build_decoder(cfg: ArchConfig, dt, kind: str, remat, remat_policy,
+                   decode_window=None, unroll=False, moe_local=False):
+    init_block = (_init_moe_block if kind == "moe" else _init_dense_block)
+    window_train = None   # full causal attention in training/prefill
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        p = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+             "layers": _stacked(lambda k: init_block(k, cfg, dt), ks[1],
+                                cfg.n_layers),
+             "ln_f": jnp.ones((cfg.d_model,), dt)}
+        if not cfg.tie_embeddings:
+            p["unembed"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size, dt)
+        if cfg.frontend:
+            p["frontend_proj"] = dense_init(ks[3], cfg.d_model, cfg.d_model, dt)
+        if cfg.mtp:
+            k1, k2 = jax.random.split(ks[3] if not cfg.frontend else ks[2])
+            p["mtp_block"] = init_block(k1, cfg, dt)
+            p["mtp_proj"] = dense_init(k2, 2 * cfg.d_model, cfg.d_model, dt)
+        return p
+
+    def forward(params, batch):
+        tokens = batch["tokens"]
+        x = _embed_in(params, cfg, tokens, batch.get("embeds"))
+        s = x.shape[1]
+        positions = jnp.arange(s)[None, :]
+
+        if kind == "moe":
+            def body(carry, lp):
+                x, aux = carry
+                y, a = _apply_moe_block(lp, x, cfg, positions=positions,
+                                        window=window_train,
+                                        moe_local=moe_local)
+                return (y, aux + a), None
+            body = _remat(body, remat, remat_policy)
+            (x, aux), _ = _scan_layers(body, (x, 0.0), params["layers"], unroll)
+        else:
+            def body(x, lp):
+                return _apply_dense_block(lp, x, cfg, positions=positions,
+                                          window=window_train), None
+            body = _remat(body, remat, remat_policy)
+            x, _ = _scan_layers(body, x, params["layers"], unroll)
+            aux = jnp.asarray(0.0)
+
+        logits = _logits_out(params, cfg, x)
+        if cfg.mtp:
+            # DeepSeek-V3 multi-token prediction: one extra block predicts t+2
+            # from [h_t ; emb(tok_{t+1})].
+            emb_next = jnp.roll(params["embed"][tokens], -1, axis=1)
+            if cfg.frontend:
+                pad = x.shape[1] - emb_next.shape[1]
+                emb_next = jnp.pad(emb_next, ((0, 0), (pad, 0), (0, 0)))
+            h = jnp.concatenate([x, emb_next], axis=-1) @ params["mtp_proj"]
+            if kind == "moe":
+                h, a2 = _apply_moe_block(params["mtp_block"], h, cfg,
+                                         positions=positions,
+                                         moe_local=moe_local)
+                aux = aux + a2
+            else:
+                h = _apply_dense_block(params["mtp_block"], h, cfg,
+                                       positions=positions)
+            mtp_logits = _logits_out(params, cfg, h)
+            return logits, {"aux": aux, "mtp_logits": mtp_logits}
+        return logits, {"aux": aux}
+
+    def init_cache(params, batch, prefill_len=0):
+        W = min(decode_window or (prefill_len + 128), prefill_len + 128)
+        if cfg.attention_kind == "mla":
+            one = lambda _: mla.init_mla_cache(batch, W, cfg.mla, dt,
+                                               prefill_len)
+        else:
+            one = lambda _: attn.init_kv_cache(batch, W, cfg.n_kv_heads,
+                                               cfg.resolved_head_dim, dt,
+                                               prefill_len)
+        return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+    def decode_step(params, tokens, cache, position=None):
+        x = params["embed"][tokens]                 # (b, 1, d)
+        if position is None:
+            position = jnp.max(jax.tree_util.tree_leaves(cache.pos)[0]) + 1
+
+        def body(x, layer):
+            lp, lc = layer
+            xin = rms_norm(x, lp["ln1"])
+            if cfg.attention_kind == "mla":
+                h, nc = mla.decode_mla_attention(
+                    lp["attn"], xin, lc, n_heads=cfg.n_heads, m=cfg.mla,
+                    theta=cfg.rope_theta, position=position,
+                    window=decode_window)
+            else:
+                h, nc = attn.decode_attention(
+                    lp["attn"], xin, lc, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                    theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                    position=position, window=decode_window)
+            x = x + h
+            xin = rms_norm(x, lp["ln2"])
+            if kind == "moe":
+                y, _ = moe.apply_moe(lp["moe"], xin, cfg.moe, cfg.activation)
+            else:
+                y = apply_ffn(lp["ffn"], xin, cfg.activation)
+            return x + y, nc
+
+        x, new_cache = _scan_layers(body, x, (params["layers"], cache), unroll)
+        return _logits_out(params, cfg, x), new_cache
+
+    return Model(cfg, init, forward, init_cache, decode_step)
+
+
+# ----- rwkv6 ---------------------------------------------------------------
+
+def _build_rwkv(cfg: ArchConfig, dt, remat, unroll=False):
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+                "layers": _stacked(lambda k: _init_rwkv_block(k, cfg, dt),
+                                   ks[1], cfg.n_layers),
+                "ln_f": jnp.ones((cfg.d_model,), dt),
+                "unembed": dense_init(ks[2], cfg.d_model, cfg.vocab_size, dt)}
+
+    def block(lp, x):
+        h = rwkv6.rwkv6_time_mix(lp["tm"],
+                                 layer_norm(x, lp["ln1"], lp["ln1b"]), cfg.ssm)
+        x = x + h
+        h = rwkv6.rwkv6_channel_mix(lp["tm"],
+                                    layer_norm(x, lp["ln2"], lp["ln2b"]))
+        return x + h
+
+    def forward(params, batch):
+        x = params["embed"][batch["tokens"]]
+        body = _remat(lambda x, lp: (block(lp, x), None), remat)
+        x, _ = _scan_layers(body, x, params["layers"], unroll)
+        x = rms_norm(x, params["ln_f"])
+        return x @ params["unembed"], {"aux": jnp.asarray(0.0)}
+
+    def init_cache(params, batch, prefill_len=0):
+        one = lambda _: rwkv6.init_rwkv_cache(batch, cfg.d_model, cfg.ssm, dt)
+        return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+    def decode_step(params, tokens, cache, position=None):
+        x = params["embed"][tokens]
+
+        def body(x, layer):
+            lp, lc = layer
+            h, lc = rwkv6.rwkv6_step(lp["tm"],
+                                     layer_norm(x, lp["ln1"], lp["ln1b"]),
+                                     lc, cfg.ssm)
+            x = x + h
+            h, lc = rwkv6.rwkv6_channel_step(
+                lp["tm"], layer_norm(x, lp["ln2"], lp["ln2b"]), lc)
+            return x + h, lc
+
+        x, new_cache = _scan_layers(body, x, (params["layers"], cache), unroll)
+        x = rms_norm(x, params["ln_f"])
+        return x @ params["unembed"], new_cache
+
+    return Model(cfg, init, forward, init_cache, decode_step)
+
+
+# ----- zamba2 hybrid --------------------------------------------------------
+
+def _build_zamba(cfg: ArchConfig, dt, remat, decode_window=None, unroll=False):
+    group = cfg.shared_attn_every or cfg.n_layers
+    n_groups = cfg.n_layers // group
+    assert n_groups * group == cfg.n_layers
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        mamba = _stacked(lambda k: _init_mamba_block(k, cfg, dt), ks[1],
+                         cfg.n_layers)
+        # reshape leading dim to (groups, per-group)
+        mamba = jax.tree.map(
+            lambda a: a.reshape((n_groups, group) + a.shape[1:]), mamba)
+        return {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+                "mamba": mamba,
+                "shared": _init_dense_block(ks[2], cfg, dt),  # ONE shared block
+                "ln_f": jnp.ones((cfg.d_model,), dt),
+                "unembed": dense_init(ks[3], cfg.d_model, cfg.vocab_size, dt)}
+
+    def forward(params, batch):
+        x = params["embed"][batch["tokens"]]
+        s = x.shape[1]
+        positions = jnp.arange(s)[None, :]
+        shared = params["shared"]
+
+        def mamba_body(x, lp):
+            return x + mamba2.mamba2_forward(
+                lp["mix"], rms_norm(x, lp["ln"]), cfg.ssm), None
+
+        def group_body(x, gp):
+            x, _ = _scan_layers(_remat(mamba_body, remat), x, gp, unroll)
+            # shared attention block (same params every group)
+            x = _apply_dense_block(shared, x, cfg, positions=positions,
+                                   window=cfg.sliding_window)
+            return x, None
+
+        x, _ = _scan_layers(group_body, x, params["mamba"], unroll)
+        x = rms_norm(x, params["ln_f"])
+        return x @ params["unembed"], {"aux": jnp.asarray(0.0)}
+
+    def init_cache(params, batch, prefill_len=0):
+        W = min(decode_window or (prefill_len + 128), prefill_len + 128)
+        m = jax.vmap(lambda _: mamba2.init_mamba_cache(batch, cfg.d_model,
+                                                       cfg.ssm, dt))(
+            jnp.arange(cfg.n_layers))
+        m = jax.tree.map(lambda a: a.reshape((n_groups, group) + a.shape[1:]), m)
+        a = jax.vmap(lambda _: attn.init_kv_cache(
+            batch, W, cfg.n_kv_heads, cfg.resolved_head_dim, dt,
+            prefill_len))(jnp.arange(n_groups))
+        return {"mamba": m, "attn": a}
+
+    def decode_step(params, tokens, cache, position=None):
+        x = params["embed"][tokens]
+        if position is None:
+            position = jnp.max(cache["attn"].pos) + 1
+        shared = params["shared"]
+
+        def mamba_body(x, layer):
+            lp, lc = layer
+            h, lc = mamba2.mamba2_step(lp["mix"], rms_norm(x, lp["ln"]), lc,
+                                       cfg.ssm)
+            return x + h, lc
+
+        def group_body(x, layer):
+            gp, gc_m, gc_a = layer
+            x, gc_m = _scan_layers(mamba_body, x, (gp, gc_m), unroll)
+            xin = rms_norm(x, shared["ln1"])
+            h, gc_a = attn.decode_attention(
+                shared["attn"], xin, gc_a, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                theta=cfg.rope_theta, qk_norm=cfg.qk_norm, position=position,
+                window=decode_window)
+            x = x + h
+            x = x + apply_ffn(shared["ffn"], rms_norm(x, shared["ln2"]),
+                              cfg.activation)
+            return x, (gc_m, gc_a)
+
+        x, (new_m, new_a) = _scan_layers(
+            group_body, x, (params["mamba"], cache["mamba"], cache["attn"]),
+            unroll)
+        x = rms_norm(x, params["ln_f"])
+        return x @ params["unembed"], {"mamba": new_m, "attn": new_a}
+
+    return Model(cfg, init, forward, init_cache, decode_step)
+
+
+# ----- seamless enc-dec -----------------------------------------------------
+
+def _build_encdec(cfg: ArchConfig, dt, remat, decode_window=None, unroll=False):
+    def init_dec_block(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dt),
+            "self": attn.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.resolved_head_dim,
+                                        cfg.qk_norm, dt),
+            "ln_x": jnp.ones((cfg.d_model,), dt),
+            "cross": attn.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads,
+                                         cfg.resolved_head_dim, False, dt),
+            "ln2": jnp.ones((cfg.d_model,), dt),
+            "ffn": init_ffn(k3, cfg.d_model, cfg.d_ff, cfg.activation, dt),
+        }
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        return {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+                "frontend_proj": dense_init(ks[1], cfg.d_model, cfg.d_model, dt),
+                "enc_layers": _stacked(lambda k: _init_dense_block(k, cfg, dt),
+                                       ks[2], cfg.enc_layers),
+                "dec_layers": _stacked(init_dec_block, ks[3], cfg.n_layers),
+                "ln_f": jnp.ones((cfg.d_model,), dt),
+                "unembed": dense_init(ks[4], cfg.d_model, cfg.vocab_size, dt)}
+
+    def encode(params, embeds):
+        x = embeds.astype(dt) @ params["frontend_proj"]
+        pos = jnp.arange(x.shape[1])[None, :]
+
+        def body(x, lp):
+            return _apply_dense_block(lp, x, cfg, positions=pos,
+                                      causal=False), None
+        x, _ = _scan_layers(_remat(body, remat), x, params["enc_layers"], unroll)
+        return x
+
+    def forward(params, batch):
+        memory = encode(params, batch["embeds"])
+        x = params["embed"][batch["tokens"]]
+        pos = jnp.arange(x.shape[1])[None, :]
+
+        def body(x, lp):
+            h = attn.attention(lp["self"], rms_norm(x, lp["ln1"]),
+                               n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                               head_dim=cfg.resolved_head_dim,
+                               theta=cfg.rope_theta, positions=pos,
+                               window=None)
+            x = x + h
+            h = attn.attention(lp["cross"], rms_norm(x, lp["ln_x"]),
+                               n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                               head_dim=cfg.resolved_head_dim,
+                               theta=cfg.rope_theta, memory=memory)
+            x = x + h
+            return x + apply_ffn(lp["ffn"], rms_norm(x, lp["ln2"]),
+                                 cfg.activation), None
+
+        x, _ = _scan_layers(_remat(body, remat), x, params["dec_layers"], unroll)
+        x = rms_norm(x, params["ln_f"])
+        return x @ params["unembed"], {"aux": jnp.asarray(0.0)}
+
+    def init_cache(params, batch, prefill_len=0, memory=None):
+        W = min(decode_window or (prefill_len + 128), prefill_len + 128)
+        self_c = jax.vmap(lambda _: attn.init_kv_cache(
+            batch, W, cfg.n_kv_heads, cfg.resolved_head_dim, dt,
+            prefill_len))(jnp.arange(cfg.n_layers))
+        if memory is None:
+            memory = jnp.zeros((batch, cfg.frontend_positions, cfg.d_model), dt)
+        kv = jax.vmap(lambda lp: attn.cross_attention_kv(
+            {"wk": lp["cross"]["wk"], "wv": lp["cross"]["wv"]}, memory,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim))(
+            params["dec_layers"])
+        return {"self": self_c, "cross_k": kv[0], "cross_v": kv[1]}
+
+    def decode_step(params, tokens, cache, position=None):
+        x = params["embed"][tokens]
+        if position is None:
+            position = jnp.max(cache["self"].pos) + 1
+
+        def body(x, layer):
+            lp, lc, ck, cv = layer
+            h, lc = attn.decode_attention(
+                lp["self"], rms_norm(x, lp["ln1"]), lc, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                theta=cfg.rope_theta, position=position,
+                window=decode_window)
+            x = x + h
+            h = attn.decode_cross_attention(
+                lp["cross"], rms_norm(x, lp["ln_x"]), ck, cv,
+                n_heads=cfg.n_heads, head_dim=cfg.resolved_head_dim)
+            x = x + h
+            x = x + apply_ffn(lp["ffn"], rms_norm(x, lp["ln2"]),
+                              cfg.activation)
+            return x, lc
+
+        x, new_self = _scan_layers(
+            body, x, (params["dec_layers"], cache["self"],
+                      cache["cross_k"], cache["cross_v"]), unroll)
+        x = rms_norm(x, params["ln_f"])
+        logits = x @ params["unembed"]
+        return logits, {**cache, "self": new_self}
+
+    return Model(cfg, init, forward, init_cache, decode_step)

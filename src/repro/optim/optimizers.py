@@ -1,0 +1,123 @@
+"""Minimal production optimizers (optax-like, dependency-free).
+
+Each factory returns ``(init_fn, update_fn)``:
+    state = init_fn(params)
+    new_params, new_state = update_fn(params, grads, state, step)
+
+State pytrees mirror the param tree, so they inherit the param sharding rules
+(ZeRO-style fully-sharded optimizer state).  ``adafactor`` keeps factored
+second moments for >=2-D params — the only optimizer whose state fits for the
+671B dry-run config (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd(lr: float, momentum: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(params, grads, state, step):
+        del step
+        if momentum == 0.0:
+            new_p = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                 params, grads)
+            return new_p, state
+        new_m = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                             state, grads)
+        new_p = jax.tree.map(lambda p, m: p - (lr * m).astype(p.dtype),
+                             params, new_m)
+        return new_p, new_m
+
+    return init, update
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(params, grads, state, step):
+        step = step + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = treedef.unflatten([l[0] for l in leaves])
+        new_m = treedef.unflatten([l[1] for l in leaves])
+        new_v = treedef.unflatten([l[2] for l in leaves])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return init, update
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0):
+    """Factored second moments for matrices (row/col running averages);
+    full second moment only for <2-D params."""
+
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return jax.tree.map(one, params)
+
+    def update(params, grads, state, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                v = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                u = g / jnp.sqrt(jnp.maximum(v, eps))   # guard fp32 underflow
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(jnp.maximum(v, eps))
+                ns = {"v": v}
+            norm = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, norm / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        out = jax.tree.map(upd, params, grads, state,
+                           is_leaf=lambda x: isinstance(x, dict) and
+                           ("v" in x or "vr" in x))
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = treedef.unflatten([l[0] for l in leaves])
+        new_s = treedef.unflatten([l[1] for l in leaves])
+        return new_p, new_s
+
+    return init, update
+
+
+def get_optimizer(name: str, lr: float):
+    if name == "sgd":
+        return sgd(lr, momentum=0.9)
+    if name == "adamw":
+        return adamw(lr)
+    if name == "adafactor":
+        return adafactor(lr)
+    raise ValueError(name)

@@ -1,0 +1,159 @@
+"""Three-term roofline from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = Σ_ops ring-model wire seconds over parsed collectives
+
+The optimized SPMD HLO prints PER-PARTITION shapes, so everything here is
+already per-chip; no division by chip count.  collective_bytes sums the
+per-device payloads of all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute ops; wire-time uses standard ring estimates per kind.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shapes_txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+
+    @property
+    def wire_seconds(self) -> float:
+        """Ring-model per-device wire time on one ICI link."""
+        n, s = self.result_bytes, max(self.group_size, 2)
+        frac = (s - 1) / s
+        if self.kind == "all-reduce":
+            return 2 * n * frac / ICI_LINK_BW
+        if self.kind == "all-gather":          # result = gathered
+            return n * frac / ICI_LINK_BW
+        if self.kind == "reduce-scatter":      # result = scattered shard
+            return n * (s - 1) / ICI_LINK_BW
+        if self.kind == "all-to-all":
+            return n * frac / ICI_LINK_BW
+        return n / ICI_LINK_BW                 # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes_txt, kind = m.group(1), m.group(2)
+        g = _GROUP_RE.search(line)
+        group_size = int(g.group(2)) if g else 2
+        ops.append(CollectiveOp(kind, _shape_bytes(shapes_txt), group_size))
+    return ops
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    collective_counts: Dict[str, int]
+    model_flops: float = 0.0
+    argument_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    output_bytes: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        d = dict(self.__dict__)
+        d["dominant"] = self.dominant
+        d["useful_flops_ratio"] = self.useful_flops_ratio
+        return d
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: Dict[str, float], hlo_text: str,
+            model_flops: float = 0.0,
+            memory_stats=None) -> Roofline:
+    colls = parse_collectives(hlo_text)
+    coll_bytes = float(sum(c.result_bytes for c in colls))
+    coll_s = float(sum(c.wire_seconds for c in colls))
+    counts: Dict[str, int] = {}
+    for c in colls:
+        counts[c.kind] = counts.get(c.kind, 0) + 1
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    r = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes=coll_bytes,
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=byts / HBM_BW,
+        collective_s=coll_s,
+        collective_counts=counts,
+        model_flops=model_flops)
+    if memory_stats is not None:
+        r.argument_bytes = float(memory_stats.argument_size_in_bytes)
+        r.temp_bytes = float(memory_stats.temp_size_in_bytes)
+        r.output_bytes = float(memory_stats.output_size_in_bytes)
+    return r
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params,
+    D = total tokens processed."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,92 @@
+"""pjit-able train / prefill / serve steps for every assigned architecture.
+
+The functions here are shape-polymorphic pure JAX; launch/dryrun.py lowers
+them against ShapeDtypeStructs on the production mesh, and the smoke tests
+execute them for real on reduced configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import Model
+from repro.optim.optimizers import get_optimizer
+
+MOE_AUX_WEIGHT = 0.01
+MTP_WEIGHT = 0.3
+
+
+def lm_loss(cfg: ArchConfig, logits: jax.Array, tokens: jax.Array,
+            extras: Dict[str, Any]) -> jax.Array:
+    """Causal next-token CE.  With a multimodal prefix, logits cover
+    [prefix ; tokens] — only token positions (shifted) contribute."""
+    n_tok = tokens.shape[1]
+    tok_logits = logits[:, -n_tok:]
+    logp = jax.nn.log_softmax(tok_logits[:, :-1].astype(jnp.float32), -1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], -1)[..., 0]
+    loss = jnp.mean(nll)
+    if cfg.mtp and "mtp_logits" in extras:
+        # predict t+2 from position t (DeepSeek-V3 MTP aux objective)
+        mtp = extras["mtp_logits"][:, -n_tok:]
+        logp2 = jax.nn.log_softmax(mtp[:, :-2].astype(jnp.float32), -1)
+        tgt2 = tokens[:, 2:]
+        nll2 = -jnp.take_along_axis(logp2, tgt2[..., None], -1)[..., 0]
+        loss = loss + MTP_WEIGHT * jnp.mean(nll2)
+    loss = loss + MOE_AUX_WEIGHT * extras.get("aux", 0.0)
+    return loss
+
+
+def make_train_step(model: Model, optimizer: str = "adamw",
+                    lr: float = 3e-4,
+                    grad_dtype: str | None = None) -> Tuple[Callable, Callable]:
+    """Returns (init_state_fn, train_step). State = (params, opt_state, step).
+
+    grad_dtype="bfloat16" casts gradients before the optimizer update —
+    halves the cross-data-axis gradient-reduction bytes (the optimizer still
+    accumulates in fp32)."""
+    cfg = model.cfg
+    opt_init, opt_update = get_optimizer(optimizer, lr)
+
+    def init_state(key):
+        params = model.init(key)
+        return params, opt_init(params), jnp.zeros((), jnp.int32)
+
+    def train_step(params, opt_state, step, batch):
+        def loss_fn(p):
+            logits, extras = model.forward(p, batch)
+            return lm_loss(cfg, logits, batch["tokens"], extras)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if grad_dtype is not None:
+            gdt = jnp.dtype(grad_dtype)
+            grads = jax.tree.map(lambda g: g.astype(gdt), grads)
+        params, opt_state = opt_update(params, grads, opt_state, step)
+        return params, opt_state, step + 1, {"loss": loss}
+
+    return init_state, train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits[:, -1]        # next-token logits
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """One decode step: new token against a seq_len-deep cache."""
+    def serve_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        return logits[:, -1], cache
+    return serve_step
+
+
+def default_optimizer(cfg: ArchConfig) -> str:
+    # Adafactor for the 671B config: AdamW fp32 moments (8 bytes/param)
+    # cannot fit 256 chips; factored moments can (DESIGN.md §5).
+    return "adafactor" if cfg.n_params() > 1e11 else "adamw"

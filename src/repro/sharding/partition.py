@@ -1,0 +1,131 @@
+"""Partition rules: param/activation PartitionSpecs with divisibility guards.
+
+Baseline scheme (DESIGN.md §5), applied uniformly across the zoo:
+
+* weight matrices  (…, rows, cols):  rows → FSDP axes ("pod","data") when
+  divisible (falling back to "data" alone, then unsharded), cols → "model".
+* stacked-layer leading dims are never sharded (they are scanned over).
+* batch dims of activations/caches → ("pod","data"); head dims of KV caches
+  → "model"; everything guarded by divisibility so odd vocab sizes
+  (49155) or head counts (9, 14) degrade to replication instead of erroring.
+
+Nothing here is arch-specific: the guard makes one rule-set serve all ten
+assigned architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _pick(dim: int, mesh: Mesh, candidates: Sequence) -> Optional[Any]:
+    """First candidate axis(-group) that divides `dim`."""
+    for c in candidates:
+        if dim % _axis_size(mesh, c) == 0 and _axis_size(mesh, c) > 1:
+            return c
+    return None
+
+
+def param_spec(path: str, arr, mesh: Mesh, *, fsdp: bool = True,
+               expert_parallel: bool = False) -> P:
+    """PartitionSpec for one parameter array (path = '/'-joined tree keys).
+
+    expert_parallel: shard the EXPERT dim of stacked MoE weights
+    (…, E, d_in, d_out) on the `model` axis instead of the per-expert
+    d_out — each device then owns E/|model| whole experts (expert
+    parallelism) rather than a slice of every expert (tensor parallelism).
+    """
+    shape = arr.shape
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    if nd == 1:
+        # vectors (norm scales, biases): replicate
+        return P(*([None] * nd))
+    spec: list = [None] * nd
+    rows, cols = nd - 2, nd - 1
+    row_cands = ([ _fsdp_axes(mesh), "data" ] if fsdp else [])
+    if expert_parallel and "experts" in path and nd >= 3:
+        spec[nd - 3] = _pick(shape[nd - 3], mesh, ["model"])
+        if expert_parallel == "megatron":
+            # column-parallel w_gate/w_up (d_ff on data), row-parallel
+            # w_down (d_ff on data): the d_model contraction stays local,
+            # one output all-reduce per up/down pair instead of one
+            # partial-sum all-reduce per matmul.
+            if path.endswith("w_down"):
+                spec[rows] = _pick(shape[rows], mesh, ["data"])
+            else:
+                spec[cols] = _pick(shape[cols], mesh, ["data"])
+            return P(*spec)
+        spec[rows] = _pick(shape[rows], mesh, row_cands)
+        return P(*spec)
+    spec[rows] = _pick(shape[rows], mesh, row_cands)
+    spec[cols] = _pick(shape[cols], mesh, ["model"])
+    return P(*spec)
+
+
+def params_shardings(params, mesh: Mesh, *, fsdp: bool = True,
+                     expert_parallel: bool = False):
+    """NamedShardings for a whole param pytree."""
+    def one(path, arr):
+        keys = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        return NamedSharding(mesh, param_spec(keys, arr, mesh, fsdp=fsdp,
+                                              expert_parallel=expert_parallel))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh, *,
+               dp_over_model: bool = False) -> P:
+    """Activations / token batches: dim 0 = global batch.
+
+    dp_over_model: also spread the batch over the `model` axis (pure data
+    parallelism) — right for models too small/odd-headed to use 16-way TP,
+    where TP replicates attention compute across the model axis.
+    """
+    spec: list = [None] * len(shape)
+    cands = ([_fsdp_axes(mesh) + ("model",), _fsdp_axes(mesh), "data"]
+             if dp_over_model else [_fsdp_axes(mesh), "data"])
+    spec[0] = _pick(shape[0], mesh, cands)
+    return P(*spec)
+
+
+def batch_shardings(batch, mesh: Mesh, *, dp_over_model: bool = False):
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, batch_spec(a.shape, mesh,
+                                                 dp_over_model=dp_over_model)),
+        batch)
+
+
+def cache_shardings(cache, mesh: Mesh):
+    """KV / state caches: leading dim is the stacked-layer dim (unsharded),
+    dim 1 = batch, head dims → model when divisible."""
+    def one(a):
+        nd = len(a.shape)
+        spec: list = [None] * nd
+        if nd >= 2:
+            spec[1] = _pick(a.shape[1], mesh, [_fsdp_axes(mesh), "data"])
+        if nd >= 4:
+            # (layers, batch, window, kv_heads, head_dim) or similar
+            spec[nd - 2] = _pick(a.shape[nd - 2], mesh, ["model"])
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, cache)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

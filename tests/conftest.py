@@ -1,0 +1,32 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device;
+# only launch/dryrun.py (its own process) forces 512 placeholder devices.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def oran_data():
+    from repro.data import oran
+    X, y = oran.generate(n_per_class=800, seed=0)
+    (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
+    return (Xtr, ytr), (Xte, yte)
+
+
+@pytest.fixture(scope="session")
+def client_data(oran_data):
+    from repro.data import oran
+    (Xtr, ytr), _ = oran_data
+    return oran.partition_non_iid(Xtr, ytr, n_clients=50,
+                                  samples_per_client=64, seed=0)
+
+
+@pytest.fixture()
+def system_params():
+    from repro.core.cost import SystemParams
+    return SystemParams(seed=0)

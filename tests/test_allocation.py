@@ -1,0 +1,91 @@
+"""P2 resource-allocation solver: exactness vs brute force + constraints
+(paper eq. 22 / §IV-D), property-based via hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocation import solve_bandwidth, solve_p2
+from repro.core.cost import (SystemParams, k_eps, objective, round_cost,
+                             total_time, uplink_time)
+
+
+def _sp(seed=0, M=8):
+    sp = SystemParams(M=M, seed=seed, b_min=1.0 / 50)
+    sp.S_m = np.random.default_rng(seed).uniform(5e5, 2e6, M)
+    sp.d_model_bits = 6e6
+    return sp
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), E=st.integers(1, 20),
+       nsel=st.integers(1, 8))
+def test_bandwidth_constraints(seed, E, nsel):
+    sp = _sp(seed)
+    a = np.zeros(sp.M)
+    a[np.random.default_rng(seed).choice(sp.M, nsel, replace=False)] = 1
+    b = solve_bandwidth(a, E, sp)
+    # (22b): full budget allocated among selected
+    assert abs(b.sum() - 1.0) < 1e-6
+    # (22c): minimum bandwidth for every selected client
+    assert (b[a > 0] >= sp.b_min - 1e-9).all()
+    # no bandwidth for unselected clients
+    assert (b[a == 0] == 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), E=st.integers(1, 10))
+def test_bandwidth_beats_random_feasible(seed, E):
+    """The min-max solution's latency must be <= any random feasible split."""
+    sp = _sp(seed, M=6)
+    a = np.ones(sp.M)
+    b_opt = solve_bandwidth(a, E, sp)
+    t_opt = total_time(a, b_opt, E, sp)
+    rng = np.random.default_rng(seed)
+    for _ in range(20):
+        raw = rng.uniform(sp.b_min, 1.0, sp.M)
+        b = raw / raw.sum()
+        if (b < sp.b_min).any():
+            continue
+        assert t_opt <= total_time(a, b, E, sp) + 1e-9
+
+
+def test_bandwidth_equalizes_finish_times():
+    """Unconstrained optimum: every selected client finishes uplink at τ."""
+    sp = _sp(3, M=5)
+    sp.b_min = 1e-6
+    a = np.ones(sp.M)
+    E = 4
+    b = solve_bandwidth(a, E, sp)
+    finish = E * sp.Q_C + uplink_time(a, b, sp)
+    assert np.ptp(finish) < 1e-6 * finish.mean()
+
+
+def test_p2_guard_never_increases_E():
+    sp = _sp(1)
+    a = np.ones(sp.M)
+    _, e_new, _ = solve_p2(a, E_last=3, sp=sp)
+    assert e_new <= 3
+
+
+def test_p2_beats_uniform_allocation():
+    sp = _sp(7)
+    a = np.ones(sp.M)
+    b, E, val = solve_p2(a, E_last=sp.E_max, sp=sp)
+    uni = a / a.sum()
+    for E_u in range(1, sp.E_max + 1):
+        assert val <= objective(a, uni, E_u, sp) + 1e-9
+
+
+def test_k_eps_monotone_decreasing_in_E():
+    ks = [k_eps(E, 0.1) for E in range(1, 21)]
+    assert all(a >= b for a, b in zip(ks, ks[1:]))
+    # Corollary 4 floor: K_eps -> 1/eps^2 as E -> inf
+    assert ks[-1] >= 1.0 / 0.1 ** 2
+
+
+def test_round_cost_increases_with_E():
+    sp = _sp(2)
+    a = np.ones(sp.M)
+    b = solve_bandwidth(a, 1, sp)
+    costs = [round_cost(a, b, E, sp) for E in (1, 5, 10, 20)]
+    assert all(c1 <= c2 + 1e-12 for c1, c2 in zip(costs, costs[1:]))

@@ -1,0 +1,39 @@
+"""Checkpoint save/restore roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io
+
+
+def test_roundtrip(tmp_path):
+    tree = {"layers": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+    io.save(tmp_path / "ckpt", tree, metadata={"round": 3})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored = io.restore(tmp_path / "ckpt", like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert io.manifest(tmp_path / "ckpt")["metadata"]["round"] == 3
+
+
+def test_shape_mismatch_raises(tmp_path):
+    io.save(tmp_path / "c2", {"w": jnp.zeros((3,))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        io.restore(tmp_path / "c2",
+                   {"w": jax.ShapeDtypeStruct((4,), jnp.float32)})
+
+
+def test_splitme_state_roundtrip(tmp_path):
+    from repro.configs.splitme_dnn import DNN10
+    from repro.core import dnn
+    w_c = dnn.init_client(jax.random.PRNGKey(0), DNN10)
+    w_i = dnn.init_inverse_server(jax.random.PRNGKey(1), DNN10)
+    io.save(tmp_path / "fl", {"w_c": w_c, "w_s_inv": w_i})
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        {"w_c": w_c, "w_s_inv": w_i})
+    back = io.restore(tmp_path / "fl", like)
+    np.testing.assert_array_equal(back["w_c"][0]["w"], w_c[0]["w"])

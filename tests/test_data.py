@@ -1,0 +1,48 @@
+"""Synthetic COMMAG O-RAN dataset properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import oran
+
+
+def test_class_balance_and_shapes():
+    X, y = oran.generate(n_per_class=500, seed=1)
+    assert X.shape == (1500, oran.N_FEATURES)
+    counts = np.bincount(y, minlength=3)
+    # label noise moves a few, but balance stays within 10%
+    assert counts.min() > 0.9 * 500 * 0.9
+    # standardised features
+    np.testing.assert_allclose(X.mean(0), 0.0, atol=0.05)
+    np.testing.assert_allclose(X.std(0), 1.0, atol=0.05)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_clients=st.integers(3, 50), spc=st.integers(4, 64),
+       seed=st.integers(0, 100))
+def test_non_iid_partition_one_class_per_client(n_clients, spc, seed):
+    X, y = oran.generate(n_per_class=300, seed=0, label_noise=0.0)
+    part = oran.partition_non_iid(X, y, n_clients, spc, seed=seed)
+    assert part["x"].shape == (n_clients, spc, oran.N_FEATURES)
+    for m in range(n_clients):
+        # paper §V-A: each near-RT-RIC stores only one slice type
+        assert len(np.unique(part["y"][m])) == 1
+        assert part["y"][m][0] == m % 3
+
+
+def test_classes_are_separable_but_overlapping():
+    """A linear probe should beat chance but not saturate (the paper's DNN
+    tops out ~83%)."""
+    X, y = oran.generate(n_per_class=1000, seed=0)
+    (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
+    # one-vs-rest least squares probe
+    Y = np.eye(3)[ytr]
+    W = np.linalg.lstsq(Xtr, Y, rcond=None)[0]
+    acc = (np.argmax(Xte @ W, -1) == yte).mean()
+    assert 0.5 < acc < 0.95, acc
+
+
+def test_generation_is_deterministic():
+    a = oran.generate(100, seed=7)
+    b = oran.generate(100, seed=7)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])

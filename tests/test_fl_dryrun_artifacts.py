@@ -1,0 +1,27 @@
+"""The paper's headline claim as committed dry-run artifacts: SplitMe's
+per-round collective traffic is constant in E; vanilla SFL's scales with E."""
+import json
+from pathlib import Path
+
+import pytest
+
+RESULTS = Path(__file__).resolve().parents[1] / "benchmarks" / "results"
+
+
+@pytest.mark.parametrize("mesh", ["16x16", "2x16x16"])
+def test_splitme_collectives_constant_in_E(mesh):
+    f = RESULTS / f"fl_dryrun_{mesh}.json"
+    if not f.exists():
+        pytest.skip("run python -m repro.launch.fl_dryrun first")
+    d = json.loads(f.read_text())
+    assert d["splitme_bytes_constant_in_E"]
+    assert d["sfl_bytes_scale_with_E"]
+    # SplitMe's only per-round collective is ONE fused FedAvg all-reduce
+    assert d["splitme_E10"]["counts"] == {"all-reduce": 1}
+    # vanilla SFL pays 2 boundary permutes per local update
+    assert d["sfl_E10"]["counts"]["collective-permute"] == 20
+    # Step 4: one Gram all-reduce per server layer (8 layers), one shot
+    assert d["inversion"]["counts"]["all-reduce"] == 8
+    # headline ratio at E=10 (paper: multiple-comm-per-round -> one-per-round)
+    ratio = d["sfl_E10"]["collective_bytes"] / d["splitme_E10"]["collective_bytes"]
+    assert ratio > 10

@@ -1,0 +1,81 @@
+"""Analytic layer-wise inversion (paper eq. 8-9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.splitme_dnn import DNNConfig
+from repro.core import dnn
+from repro.core.inversion import invert_inverse_model
+
+
+def test_linear_inverse_recovered_exactly():
+    """1-layer server (pure ridge regression): inversion must recover the
+    least-squares map label->smashed->label almost exactly."""
+    cfg = DNNConfig(n_features=8, hidden=(16,), split_index=1, n_classes=3)
+    # server = one linear layer 16 -> 3; inverse = 3 -> 16
+    key = jax.random.PRNGKey(0)
+    w_true = jax.random.normal(key, (16, 3)) * 0.5
+    o = jax.random.normal(jax.random.PRNGKey(1), (500, 16))
+    z = o @ w_true                              # noiseless targets
+    inv = dnn.init_inverse_server(jax.random.PRNGKey(2), cfg)
+    assert len(inv) == 1          # single-layer server -> targets = [labels]
+    got = invert_inverse_model(inv, o, z, cfg, gamma=1e-6)
+    w_est = got[-1]["w"]
+    np.testing.assert_allclose(w_est, w_true, rtol=1e-3, atol=1e-3)
+
+
+def test_inversion_classifies_after_mutual_training():
+    """After (short) mutual training, the inverted server must classify the
+    split features far above chance."""
+    from repro.core import mutual
+    cfg = DNNConfig(n_features=10, hidden=(32, 16), split_index=1,
+                    n_classes=3)
+    key = jax.random.PRNGKey(0)
+    n = 600
+    X = jax.random.normal(key, (n, 10))
+    y = (X[:, 0] + 0.5 * X[:, 1] > 0).astype(jnp.int32) \
+        + (X[:, 2] > 1).astype(jnp.int32)
+    y1 = jax.nn.one_hot(y, 3)
+    w_c = dnn.init_client(jax.random.PRNGKey(1), cfg)
+    w_i = dnn.init_inverse_server(jax.random.PRNGKey(2), cfg)
+
+    @jax.jit
+    def step(w_c, w_i):
+        def lc(w):
+            return mutual.client_loss(dnn.client_forward(w, X, cfg),
+                                      dnn.inverse_server_forward(w_i, y1, cfg))
+        def ls(w):
+            return mutual.server_loss(dnn.inverse_server_forward(w, y1, cfg),
+                                      dnn.client_forward(w_c, X, cfg))
+        w_c = jax.tree.map(lambda p, g: p - 0.1 * g, w_c, jax.grad(lc)(w_c))
+        w_i = jax.tree.map(lambda p, g: p - 0.05 * g, w_i, jax.grad(ls)(w_i))
+        return w_c, w_i
+
+    for _ in range(400):
+        w_c, w_i = step(w_c, w_i)
+    smashed = dnn.client_forward(w_c, X, cfg)
+    w_s = invert_inverse_model(w_i, smashed, y1, cfg, gamma=1e-3)
+    acc = float(jnp.mean(
+        jnp.argmax(dnn.server_forward(w_s, smashed, cfg), -1) == y))
+    assert acc > 0.7, acc
+
+
+def test_inversion_allreduce_equivalence():
+    """Sum-of-client Grams == single-shot Gram on concatenated data (the
+    all-reduce in eq. 9 is exact, not an approximation)."""
+    cfg = DNNConfig(n_features=6, hidden=(12, 8), split_index=1, n_classes=3)
+    inv = dnn.init_inverse_server(jax.random.PRNGKey(0), cfg)
+    xs = [jax.random.normal(jax.random.PRNGKey(i), (50, 12)) for i in range(4)]
+    ys = [jax.nn.one_hot(jax.random.randint(jax.random.PRNGKey(10 + i),
+                                            (50,), 0, 3), 3)
+          for i in range(4)]
+    w_all = invert_inverse_model(inv, jnp.concatenate(xs),
+                                 jnp.concatenate(ys), cfg, gamma=1e-3)
+    # shard over a 4-way client mesh axis via shard_map-style vmap+psum:
+    # here we emulate by computing the same quantity from stacked shards.
+    from repro.core.inversion import _augment, _gram
+    o = jnp.concatenate(xs)
+    a0_sum = sum(_gram(_augment(x), _augment(x), False)[0] for x in xs)
+    a0_all = _gram(_augment(o), _augment(o), False)[0]
+    np.testing.assert_allclose(a0_sum, a0_all, rtol=1e-4, atol=1e-3)
+    assert len(w_all) == len(cfg.layer_dims) - 1 - cfg.split_index

@@ -1,0 +1,58 @@
+"""Regression locks for the §Perf hillclimb wins: the committed optimized
+artifacts must strictly improve their baselines' dominant roofline term."""
+import json
+from pathlib import Path
+
+import pytest
+
+D = Path(__file__).resolve().parents[1] / "benchmarks" / "results" / "dryrun"
+
+
+def _load(name):
+    f = D / name
+    if not f.exists():
+        pytest.skip(f"{name} not generated (run repro.launch.roofline_run)")
+    d = json.loads(f.read_text())
+    assert d.get("ok"), d.get("error")
+    return d
+
+
+def test_deepseek_train_optimized_beats_baseline():
+    base = _load("deepseek-v3-671b__train_4k__16x16__roofline.json")
+    opt = _load("deepseek-v3-671b__train_4k__16x16__opt-ep-local__roofline.json")
+    assert base["dominant"] == "collective"
+    assert opt["collective_s"] < 0.8 * base["collective_s"]     # ≥20% win
+    assert opt["memory_s"] < 0.7 * base["memory_s"]
+    assert opt["useful_flops_ratio"] > 3 * base["useful_flops_ratio"]
+
+
+def test_smollm_train_optimized_beats_baseline():
+    base = _load("smollm-135m__train_4k__16x16__roofline.json")
+    opt = _load("smollm-135m__train_4k__16x16__opt-puredp-noremat__roofline.json")
+    assert base["dominant"] == "memory"
+    assert opt["memory_s"] < 0.1 * base["memory_s"]             # ≥10× win
+    assert opt["collective_s"] < 0.1 * base["collective_s"]
+    assert opt["useful_flops_ratio"] > 5 * base["useful_flops_ratio"]
+
+
+def test_granite_moe_train_optimized_beats_baseline():
+    base = _load("granite-moe-3b-a800m__train_4k__16x16__roofline.json")
+    opt = _load("granite-moe-3b-a800m__train_4k__16x16__opt-meg__roofline.json")
+    assert base["dominant"] == "collective"
+    assert opt["collective_s"] < 0.5 * base["collective_s"]     # ≥2× win
+    assert opt["memory_s"] < 0.6 * base["memory_s"]
+
+
+def test_roofline_census_is_communication_bound():
+    """The fleet-level observation §Perf attacks: most combos are
+    collective-bound on this mesh."""
+    doms = []
+    for f in D.glob("*__roofline.json"):
+        if "__opt" in f.name:
+            continue
+        d = json.loads(f.read_text())
+        if d.get("ok"):
+            doms.append(d["dominant"])
+    if len(doms) < 80:
+        pytest.skip("roofline sweep incomplete")
+    assert doms.count("collective") > len(doms) / 2

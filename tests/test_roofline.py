@@ -1,0 +1,59 @@
+"""Roofline HLO collective parser + term math."""
+import numpy as np
+
+from repro.roofline.analysis import (CollectiveOp, Roofline, analyze,
+                                     parse_collectives)
+
+HLO_SAMPLE = """
+  %all-gather = f32[1024,32]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,4]<=[4,16]T(1,0), dimensions={0}
+  %all-reduce.1 = bf16[128,256]{1,0} all-reduce(%y), channel_id=2, replica_groups=[4,16]<=[64]
+  %fusion = f32[8]{0} fusion(%all-reduce.1), kind=kLoop
+  %rs = f32[64,64]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[1,16]<=[16]
+  %cp = bf16[32]{0} collective-permute(%w), channel_id=4
+  %a2a = f32[16,16]{1,0} all-to-all(%v), channel_id=5, replica_groups=[2,8]<=[16]
+"""
+
+
+def test_parse_kinds_and_bytes():
+    ops = parse_collectives(HLO_SAMPLE)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                     "collective-permute", "reduce-scatter"]
+    ag = next(o for o in ops if o.kind == "all-gather")
+    assert ag.result_bytes == 1024 * 32 * 4
+    assert ag.group_size == 4
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert ar.result_bytes == 128 * 256 * 2
+
+
+def test_wire_time_ring_model():
+    op = CollectiveOp("all-reduce", 100e9, 16)  # 100 GB over 16 chips
+    # 2 * N * (S-1)/S / 50GB/s
+    expect = 2 * 100e9 * (15 / 16) / 50e9
+    np.testing.assert_allclose(op.wire_seconds, expect)
+
+
+def test_analyze_terms():
+    cost = {"flops": 197e12, "bytes accessed": 819e9}
+    r = analyze("a", "s", "16x16", 256, cost, HLO_SAMPLE, model_flops=1e15)
+    np.testing.assert_allclose(r.compute_s, 1.0)
+    np.testing.assert_allclose(r.memory_s, 1.0)
+    assert r.collective_bytes > 0
+    assert r.dominant in ("compute", "memory", "collective")
+    assert 0 < r.useful_flops_ratio < 1
+
+
+def test_dryrun_results_exist_and_pass():
+    """The committed dry-run sweep must cover all 40 combos x 2 meshes and
+    every one must have lowered+compiled OK (deliverable e)."""
+    import json
+    from pathlib import Path
+    d = Path(__file__).resolve().parents[1] / "benchmarks/results/dryrun"
+    files = list(d.glob("*__*.json"))
+    base = [f for f in files if "__opt" not in f.name]
+    if len(base) < 80:
+        import pytest
+        pytest.skip(f"dry-run sweep incomplete ({len(base)}/80); run "
+                    "python -m repro.launch.dryrun --all --mesh both")
+    ok = sum(1 for f in base if json.loads(f.read_text()).get("ok"))
+    assert ok >= 80, f"only {ok} dry-run combos passed"

@@ -1,0 +1,33 @@
+"""LR schedules incl. the paper's Corollary 2/3 rates."""
+import math
+
+import pytest
+
+from repro.optim.schedules import (constant, corollary2_rate, splitme_rates,
+                                   warmup_cosine)
+
+
+def test_warmup_cosine_shape():
+    f = warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+    assert f(0) < f(5) < f(9)                 # warming up
+    assert abs(f(10) - 1.0) < 0.01            # peak
+    assert f(50) < f(10)                      # decaying
+    assert f(99) >= 0.1 * 0.99                # floor
+
+
+def test_corollary2_ordering():
+    """B1 < B2 ⇒ η_C > η_S (paper Corollary 3)."""
+    eta_c, eta_s = splitme_rates(T=1000, E=10, L=1.0, b1=0.1, b2=0.3)
+    assert eta_c > eta_s > 0
+
+
+def test_corollary2_sqrtT_scaling():
+    """η ∝ 1/√T — the O(1/√T) convergence knob."""
+    e1 = corollary2_rate(T=100, E=4, L=1.0, B=0.2)
+    e2 = corollary2_rate(T=400, E=4, L=1.0, B=0.2)
+    assert abs(e1 / e2 - 2.0) < 1e-9
+
+
+def test_b1_lt_b2_enforced():
+    with pytest.raises(AssertionError):
+        splitme_rates(T=10, E=1, b1=0.5, b2=0.2)

@@ -1,0 +1,52 @@
+"""Algorithm 1 (deadline-aware trainer selection) properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import SystemParams
+from repro.core.selection import (initial_state, select_trainers,
+                                  update_state)
+from repro.core.allocation import solve_bandwidth
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), E=st.integers(1, 20))
+def test_selected_satisfy_deadline_constraint(seed, E):
+    sp = SystemParams(M=20, seed=seed)
+    st_ = initial_state(sp)
+    # after the pessimistic first estimate, run a few rounds
+    for _ in range(4):
+        a = select_trainers(E, sp, st_)
+        b = solve_bandwidth(a, E, sp)
+        st_ = update_state(st_, a, b, sp)
+    a = select_trainers(E, sp, st_)
+    t_est = sp.alpha * st_.t_max_k + (1 - sp.alpha) * st_.t_max_km1
+    sel = a > 0
+    if sel.sum() > 1:  # ignore the forced-fallback single client
+        assert (E * (sp.Q_C + sp.Q_S) + t_est)[sel].max() \
+            <= sp.t_round[sel].max() + 1e-9
+
+
+def test_never_selects_zero():
+    sp = SystemParams(M=10, seed=0)
+    sp.t_round = np.full(10, 1e-9)  # impossible deadlines
+    a = select_trainers(20, sp, initial_state(sp))
+    assert a.sum() == 1  # fallback: fastest client
+
+
+def test_selection_grows_from_pessimistic_start():
+    """Fig. 3a dynamic: the first estimate (uniform split across all M) is
+    pessimistic; the count grows as realized times feed back."""
+    sp = SystemParams(M=50, seed=0)
+    sp.S_m = np.full(50, 8e5)
+    sp.d_model_bits = 6e6
+    st_ = initial_state(sp)
+    counts = []
+    for _ in range(12):
+        a = select_trainers(6, sp, st_)
+        b = solve_bandwidth(a, 6, sp)
+        st_ = update_state(st_, a, b, sp)
+        counts.append(int(a.sum()))
+    assert counts[-1] >= counts[0]
+    assert max(counts) > 5
+    # stabilises: last three rounds within ±3 clients
+    assert max(counts[-3:]) - min(counts[-3:]) <= 3

@@ -1,0 +1,94 @@
+"""End-to-end behaviour tests: SplitMe vs the paper's baselines on the same
+non-IID O-RAN slice data (paper §V claims, scaled down for CPU)."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs.splitme_dnn import DNN10
+from repro.core.baselines import FedAvgTrainer, ORANFedTrainer, SFLTrainer
+from repro.core.cost import SystemParams
+from repro.core.splitme import SplitMeTrainer
+
+ROUNDS = 6
+
+
+@pytest.fixture(scope="module")
+def data():
+    from repro.data import oran
+    X, y = oran.generate(n_per_class=600, seed=0)
+    (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
+    cd = oran.partition_non_iid(Xtr, ytr, 50, samples_per_client=48, seed=0)
+    return cd, (Xte, yte)
+
+
+@pytest.fixture(scope="module")
+def runs(data):
+    cd, test = data
+    out = {}
+    for name, cls, kw in [
+        ("splitme", SplitMeTrainer, {}),
+        ("fedavg", FedAvgTrainer, {"K": 10, "E": 10}),
+        ("sfl", SFLTrainer, {"K": 20, "E": 14}),
+        ("oranfed", ORANFedTrainer, {"E": 10}),
+    ]:
+        tr = cls(DNN10, SystemParams(seed=0), copy.deepcopy(cd), test, **kw)
+        for _ in range(ROUNDS):
+            tr.run_round()
+        out[name] = tr
+    return out
+
+
+def test_all_frameworks_learn(runs):
+    """Paper Fig. 4a: SplitMe converges in ~30 rounds while the baselines
+    need ~150 on fully non-IID one-class clients.  At 6 rounds we therefore
+    require SplitMe to be clearly above chance and every baseline to at
+    least be training (loss decreased, accuracy not below chance)."""
+    assert runs["splitme"].evaluate() > 0.6
+    for name in ("fedavg", "sfl", "oranfed"):
+        tr = runs[name]
+        # client-drift makes per-round local loss non-monotone under full
+        # non-IID (one class per client); require not-below-chance accuracy.
+        assert tr.evaluate() >= 0.30, name
+
+
+def test_splitme_converges_fastest(runs):
+    """The paper's 8x-speedup claim, scaled down: at equal (few) rounds,
+    SplitMe's accuracy strictly dominates every baseline."""
+    sme = runs["splitme"].evaluate()
+    for name in ("fedavg", "sfl", "oranfed"):
+        assert sme > runs[name].evaluate() + 0.05, name
+
+
+def test_splitme_eliminates_batch_level_transfer(runs):
+    """Paper's headline claim: SplitMe reduces SFL's multiple-communications-
+    per-round to one-per-round.  Per-round boundary traffic of SFL scales
+    with E; SplitMe's does not."""
+    sfl, sme = runs["sfl"], runs["splitme"]
+    sfl_per_sel = np.mean([m.comm_bits / m.n_selected for m in sfl.history])
+    sme_per_sel = np.mean([m.comm_bits / m.n_selected for m in sme.history])
+    assert sfl_per_sel > 1.5 * sme_per_sel
+
+
+def test_splitme_selects_more_trainers_than_fixed_k(runs):
+    """Fig. 3a: deadline-aware selection + split offloading admits more
+    trainers than FedAvg's fixed K=10."""
+    sme_sel = np.mean([m.n_selected for m in runs["splitme"].history[2:]])
+    assert sme_sel > 10
+
+
+def test_splitme_cheaper_total_comm_than_fedavg(runs):
+    """Fig. 3b/4b: with the split model (omega=1/5), SplitMe moves less per
+    round per client than FedAvg's full-model uploads."""
+    fa = runs["fedavg"]
+    sme = runs["splitme"]
+    fa_per_sel = np.mean([m.comm_bits / m.n_selected for m in fa.history])
+    sme_per_sel = np.mean([m.comm_bits / m.n_selected for m in sme.history])
+    assert sme_per_sel < fa_per_sel
+
+
+def test_deadline_respected_by_splitme(runs):
+    sp = runs["splitme"].sp
+    for m in runs["splitme"].history[2:]:
+        # simulated round latency within the slackest slice deadline
+        assert m.sim_time <= sp.t_round.max() * 1.5
