@@ -5,6 +5,9 @@ One training campaign per framework produces all four paper artifacts:
   Fig 3b: accumulated communication volume (MB)
   Fig 4a: test accuracy vs (simulated) total training time
   Fig 4b: accumulated communication resource cost vs time
+All four frameworks run through the unified engine (repro.core.engine); a
+final section measures the vmapped multi-seed campaign runner
+(repro.launch.campaign) against the same number of serial single-seed runs.
 Results are also dumped to benchmarks/results/fl_frameworks.json for the
 EXPERIMENTS.md tables.
 """
@@ -80,6 +83,50 @@ def run(fast: bool = False):
                      f"acc={acc:.3f};sim_time_s={total_time:.2f}"))
         rows.append((f"fig4b_cost_{name}", wall_us,
                      f"resource_cost={total_cost:.1f}"))
+    # ------------------------------------------------------------------
+    # Vmapped multi-seed campaign vs the same runs done serially
+    # ------------------------------------------------------------------
+    import jax
+
+    from repro.launch import campaign as camp
+
+    n_seeds = 4
+    camp_rounds = 8 if fast else 12
+    # one kwargs dict per framework, shared by the serial trainers and the
+    # campaign so the two paths always train the same workload
+    camp_specs = (("fedavg", FedAvgTrainer, {"K": 10, "E": 10}),
+                  ("splitme", SplitMeTrainer, {}))
+    for name, cls, kw in camp_specs:
+        t0 = time.perf_counter()
+        for s in range(n_seeds):
+            tr = cls(DNN10, SystemParams(seed=0), copy.deepcopy(cd),
+                     (Xte, yte), seed=s, **kw)
+            for _ in range(camp_rounds):
+                tr.run_round()
+        serial_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        res = camp.run_campaign(name, DNN10, SystemParams(seed=0), cd,
+                                rounds=camp_rounds,
+                                seeds=tuple(range(n_seeds)), **kw)
+        jax.block_until_ready(res.params)
+        vmap_s = time.perf_counter() - t0
+
+        speedup = serial_s / vmap_s
+        run_rounds = n_seeds * camp_rounds
+        summary[f"campaign_{name}"] = {
+            "seeds": n_seeds, "rounds": camp_rounds,
+            "serial_s": serial_s, "vmap_s": vmap_s,
+            "aggregate_speedup": speedup,
+            "final_loss_per_seed": res.losses[:, -1, 0].tolist(),
+        }
+        rows.append((f"campaign_serial{n_seeds}_{name}",
+                     serial_s / run_rounds * 1e6,
+                     f"{n_seeds}x{camp_rounds} rounds serial"))
+        rows.append((f"campaign_vmap{n_seeds}_{name}",
+                     vmap_s / run_rounds * 1e6,
+                     f"aggregate_speedup={speedup:.2f}x"))
+
     RESULTS.mkdir(exist_ok=True, parents=True)
     (RESULTS / "fl_frameworks.json").write_text(json.dumps(summary, indent=1))
     return rows

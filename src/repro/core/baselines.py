@@ -11,80 +11,67 @@
 All three run on the same non-IID O-RAN slice data and report the same
 metrics (selected trainers, comm volume, simulated latency, cost, accuracy)
 so benchmarks/ can reproduce the paper's figures.
+
+The local-training hot path is the unified engine (``repro.core.engine``);
+each class here only names its framework spec and selection policy.  Every
+trainer derives omega/S_m/Q_* on a private SystemParams copy, so sequential
+framework runs sharing one SystemParams no longer corrupt each other.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import dnn
-from repro.core.allocation import solve_bandwidth
+from repro.core import dnn, engine
 from repro.core.cost import SystemParams, round_cost, total_time
-from repro.core.selection import initial_state, select_trainers, update_state
-from repro.core.splitme import RoundMetrics
-
-
-def _ce_loss(layers, x, y, cfg):
-    logits = dnn.mlp_forward(layers, x, cfg.activation)
-    logp = jax.nn.log_softmax(logits, -1)
-    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+from repro.core.engine import RoundMetrics
 
 
 class _FLBase:
-    """Shared masked-vmapped local-training machinery."""
+    """Thin adapter: engine round + host-side policy + paper metrics."""
+
+    framework: str
 
     def __init__(self, cfg: DNNConfig, sp: SystemParams, client_data,
-                 test_data, lr: float, E: int, batch_size: int, seed: int):
-        self.cfg, self.sp, self.E, self.bs, self.lr = cfg, sp, E, batch_size, lr
+                 test_data, lr: float, E: int, batch_size: int, seed: int,
+                 K: int = 10):
+        self.cfg, self.E = cfg, E
         self.x = jnp.asarray(client_data["x"])
         self.y = jnp.asarray(client_data["y"])
         self.x_test, self.y_test = map(jnp.asarray, test_data)
+        self.sp, self.policy = engine.make_policy(
+            self.framework, sp, cfg, seed=seed, K=K, E=E)
         self.key = jax.random.PRNGKey(seed)
-        self.params = dnn.init_mlp(jax.random.PRNGKey(seed + 1),
-                                   cfg.layer_dims)
+        self._spec = engine.make_spec(self.framework, cfg, lr=lr,
+                                      batch_size=batch_size)
+        (self.params,) = self._spec.init_fn(
+            jax.random.PRNGKey(seed + self._spec.init_key_offset))
         self.history: List[RoundMetrics] = []
         self._round = 0
-        self._jit_round = jax.jit(self._round_impl)
+        # fixed E → exact-length scan (mask is all-ones, compiled once)
+        self._round_fn = engine.build_round_fn(self._spec, cfg, self.x,
+                                               self.y, e_max=E)
 
-    def _round_impl(self, params, a_mask, key):
-        M, n, _ = self.x.shape
-        cfg = self.cfg
-
-        def local(w, x_m, y_m, key_m):
-            def step(carry, _):
-                w, k = carry
-                k, sk = jax.random.split(k)
-                idx = jax.random.randint(sk, (self.bs,), 0, n)
-                loss, g = jax.value_and_grad(_ce_loss)(w, x_m[idx],
-                                                       y_m[idx], cfg)
-                w = jax.tree.map(lambda p, gg: p - self.lr * gg, w, g)
-                return (w, k), loss
-            (w, _), losses = jax.lax.scan(step, (w, key_m),
-                                          jnp.arange(self.E))
-            return w, jnp.mean(losses)
-
-        rep = jax.tree.map(lambda p: jnp.broadcast_to(p, (M,) + p.shape),
-                           params)
-        keys = jax.random.split(key, M)
-        w_new, losses = jax.vmap(local)(rep, self.x, self.y, keys)
-        wsum = jnp.maximum(jnp.sum(a_mask), 1.0)
-        agg = jax.tree.map(lambda p: jnp.tensordot(a_mask, p, axes=1) / wsum,
-                           w_new)
-        return agg, jnp.sum(losses * a_mask) / wsum
+    def run_round(self, eval_acc: bool = False) -> RoundMetrics:
+        a, b, self.E = self.policy.step()
+        self.key, sub = jax.random.split(self.key)
+        (self.params,), (loss,) = self._round_fn(
+            (self.params,), jnp.asarray(a, jnp.float32),
+            jnp.asarray(self.E), sub)
+        return self._record(a, b, eval_acc, float(loss))
 
     def evaluate(self) -> float:
         logits = dnn.mlp_forward(self.params, self.x_test, self.cfg.activation)
         return float(jnp.mean(jnp.argmax(logits, -1) == self.y_test))
 
-    def _record(self, a, b, comm_bits, eval_acc, loss) -> RoundMetrics:
+    def _record(self, a, b, eval_acc, loss) -> RoundMetrics:
         m = RoundMetrics(
             round=self._round, n_selected=int(a.sum()), E=self.E,
-            comm_bits=comm_bits, sim_time=total_time(a, b, self.E, self.sp),
+            comm_bits=self._spec.comm_model(a, self.E, self.sp),
+            sim_time=total_time(a, b, self.E, self.sp),
             cost=round_cost(a, b, self.E, self.sp),
             client_loss=loss,
             accuracy=self.evaluate() if eval_acc else float("nan"))
@@ -96,79 +83,37 @@ class _FLBase:
 class FedAvgTrainer(_FLBase):
     """K fixed random clients per round, uniform bandwidth."""
 
+    framework = "fedavg"
+
     def __init__(self, cfg, sp, client_data, test_data, *, K: int = 10,
                  E: int = 10, lr: float = 0.05, batch_size: int = 32,
                  seed: int = 0):
-        sp.omega = 1.0                      # full model uploaded
-        sp.S_m = np.zeros(sp.M)             # no smashed data
         super().__init__(cfg, sp, client_data, test_data, lr, E, batch_size,
-                         seed)
+                         seed, K=K)
         self.K = K
-        self.rng = np.random.default_rng(seed)
-
-    def run_round(self, eval_acc: bool = False) -> RoundMetrics:
-        sp = self.sp
-        a = np.zeros(sp.M)
-        a[self.rng.choice(sp.M, self.K, replace=False)] = 1.0
-        b = np.where(a > 0, 1.0 / self.K, 0.0)
-        self.key, sub = jax.random.split(self.key)
-        self.params, loss = self._jit_round(self.params,
-                                            jnp.asarray(a, jnp.float32), sub)
-        comm_bits = float(np.sum(a) * sp.d_model_bits)
-        return self._record(a, b, comm_bits, eval_acc, float(loss))
 
 
 class SFLTrainer(_FLBase):
     """Vanilla SplitFed: same joint gradients, but the boundary tensors move
     between xApp and rApp on EVERY local batch — counted in comm_bits."""
 
+    framework = "sfl"
+
     def __init__(self, cfg, sp, client_data, test_data, *, K: int = 20,
                  E: int = 14, lr: float = 0.05, batch_size: int = 32,
                  seed: int = 0):
         super().__init__(cfg, sp, client_data, test_data, lr, E, batch_size,
-                         seed)
+                         seed, K=K)
         self.K = K
-        self.rng = np.random.default_rng(seed)
-        d_split = dnn.client_dims(cfg)[-1]
-        # per local step: smashed up + boundary grads down, one batch each
-        self._boundary_bits = 2 * batch_size * d_split * 32.0
-
-    def run_round(self, eval_acc: bool = False) -> RoundMetrics:
-        sp = self.sp
-        a = np.zeros(sp.M)
-        a[self.rng.choice(sp.M, self.K, replace=False)] = 1.0
-        b = np.where(a > 0, 1.0 / self.K, 0.0)
-        self.key, sub = jax.random.split(self.key)
-        self.params, loss = self._jit_round(self.params,
-                                            jnp.asarray(a, jnp.float32), sub)
-        # E batch-level boundary exchanges + split-model sync per round
-        comm_bits = float(np.sum(a) * (self.E * self._boundary_bits
-                                       + sp.omega * sp.d_model_bits))
-        return self._record(a, b, comm_bits, eval_acc, float(loss))
 
 
 class ORANFedTrainer(_FLBase):
     """O-RANFed [8]: deadline-aware selection + min-max bandwidth allocation,
     full-model FL (no split)."""
 
+    framework = "oranfed"
+
     def __init__(self, cfg, sp, client_data, test_data, *, E: int = 10,
                  lr: float = 0.05, batch_size: int = 32, seed: int = 0):
-        sp.omega = 1.0
-        sp.S_m = np.zeros(sp.M)
-        # no offloading: the client computes BOTH halves locally
-        sp.Q_C = sp.Q_C + sp.Q_S
-        sp.Q_S = np.zeros(sp.M)
         super().__init__(cfg, sp, client_data, test_data, lr, E, batch_size,
                          seed)
-        self.sel_state = initial_state(sp)
-
-    def run_round(self, eval_acc: bool = False) -> RoundMetrics:
-        sp = self.sp
-        a = select_trainers(self.E, sp, self.sel_state)
-        b = solve_bandwidth(a, self.E, sp)
-        self.sel_state = update_state(self.sel_state, a, b, sp)
-        self.key, sub = jax.random.split(self.key)
-        self.params, loss = self._jit_round(self.params,
-                                            jnp.asarray(a, jnp.float32), sub)
-        comm_bits = float(np.sum(a) * sp.d_model_bits)
-        return self._record(a, b, comm_bits, eval_acc, float(loss))

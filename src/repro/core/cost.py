@@ -45,6 +45,18 @@ class SystemParams:
             # overwritten by the trainer with the real size)
             self.S_m = np.full(self.M, 1e6)
 
+    def copy(self) -> "SystemParams":
+        """Independent copy (own arrays) — trainers derive omega/S_m/Q_* on
+        a private copy so sequential framework runs never corrupt a shared
+        SystemParams instance."""
+        import copy as _copy
+        new = _copy.copy(self)
+        for name in ("Q_C", "Q_S", "t_round", "S_m"):
+            arr = getattr(new, name)
+            if arr is not None:
+                setattr(new, name, np.array(arr, copy=True))
+        return new
+
 
 def k_eps(E: int, eps: float) -> float:
     """Corollary 4: K_ε >= O((E+1)^2 / (E^2 ε^2))."""

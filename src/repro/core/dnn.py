@@ -106,5 +106,11 @@ def param_count(layers: List[dict]) -> int:
     return sum(int(p["w"].size + p["b"].size) for p in layers)
 
 
+def param_count_dims(dims: Sequence[int]) -> int:
+    """Parameter count of an MLP stack without materializing it."""
+    return sum(dims[i] * dims[i + 1] + dims[i + 1]
+               for i in range(len(dims) - 1))
+
+
 def param_bytes(layers: List[dict]) -> int:
     return sum(int(p["w"].size + p["b"].size) * 4 for p in layers)

@@ -1,0 +1,436 @@
+"""Unified jitted federated round engine for the paper's four §V frameworks.
+
+The seed implemented SplitMe, FedAvg, vanilla SFL and O-RANFed as separate
+classes, each with its own copy of the masked-vmapped local-training
+machinery.  This module owns that hot path once:
+
+* replication of the global parameters onto the vmapped client axis,
+* the jitted masked E_max-step local-SGD scan — E is a *traced* operand and
+  the scan length is static, so adaptive local-update counts (SplitMe's P2)
+  never trigger recompilation,
+* masked FedAvg aggregation over the selected set A_t,
+* per-phase loss metrics,
+* ``donate_argnums`` on the carried parameters, so round k+1 reuses round
+  k's parameter buffers instead of reallocating them,
+* RNG pre-split once per round into per-phase × per-client keys before the
+  vmapped scan (no per-step host splitting).
+
+A framework contributes only what actually differs, as a ``FrameworkSpec``:
+
+* one or more ``PhaseSpec``s — a pure per-batch ``local_step`` loss plus how
+  the phase's per-client inputs and targets derive from the round state
+  (SplitMe is two coupled phases: the server phase's targets are the smashed
+  activations of the client phase's *updated* per-client weights),
+* a ``comm_model`` — bits on the wire per round (Fig. 3b/4b input),
+* a host-side selection/allocation ``Policy`` (Alg. 1 / P2 / fixed-K).
+
+``make_policy`` also prepares a private copy of the caller's
+``SystemParams`` — the seed trainers mutated the shared instance in place,
+which silently corrupted sequential framework runs; the engine never writes
+to the caller's object.
+
+``repro.core.splitme`` and ``repro.core.baselines`` are thin adapters over
+this engine; tests/test_engine_parity.py pins them to the seed trainers'
+exact numerics.  ``repro.launch.campaign`` batches many seeds through one
+compiled round function built here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.splitme_dnn import DNNConfig
+from repro.core import dnn, mutual
+from repro.core.allocation import solve_bandwidth, solve_p2
+from repro.core.cost import SystemParams
+from repro.core.selection import (SelectionState, initial_state,
+                                  select_trainers, update_state)
+
+Params = Any                     # pytree of arrays
+ParamsTuple = Tuple[Params, ...]
+
+
+@dataclass
+class RoundMetrics:
+    round: int
+    n_selected: int
+    E: int
+    comm_bits: float          # uplink volume this round (all selected)
+    sim_time: float           # eq. 18 latency (s)
+    cost: float               # eq. 20
+    accuracy: float = float("nan")
+    client_loss: float = float("nan")
+    server_loss: float = float("nan")
+
+
+# ---------------------------------------------------------------------------
+# Framework specs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PhaseSpec:
+    """One masked local-SGD phase of a round.
+
+    ``loss_fn(w, x_batch, target_batch)`` is the pure per-batch local_step
+    loss; ``data_key`` picks the per-client input array from the round
+    context ({"x", "y", "y1"}); ``target_fn(params, updated, ctx)`` builds
+    the (M, n, …) per-client targets, where ``updated`` maps param indices
+    to the *per-client* (stacked) weights already trained by earlier phases
+    this round.
+    """
+    name: str
+    param_idx: int
+    lr: float
+    loss_fn: Callable[[Params, jax.Array, jax.Array], jax.Array]
+    data_key: str
+    target_fn: Callable[[ParamsTuple, Dict[int, Params], Dict[str, jax.Array]],
+                        jax.Array]
+    # False → mean loss over all E_max scan steps (the seed SplitMe metric);
+    # True → mean over the executed (unmasked) steps only.
+    loss_over_mask: bool = True
+
+
+@dataclass(frozen=True)
+class FrameworkSpec:
+    name: str
+    init_fn: Callable[[jax.Array], ParamsTuple]
+    phases: Tuple[PhaseSpec, ...]
+    comm_model: Callable[[np.ndarray, int, SystemParams], float]
+    batch_size: int
+    # PRNGKey(seed + offset) initializes the parameters (the seed baselines
+    # used seed+1 for init and seed for the round chain).
+    init_key_offset: int = 0
+
+
+# ---------------------------------------------------------------------------
+# The engine: build one jitted round function from a spec
+# ---------------------------------------------------------------------------
+
+def replicate(params: Params, m: int) -> Params:
+    """Broadcast global params onto the client axis (no copy until donated)."""
+    return jax.tree.map(lambda p: jnp.broadcast_to(p, (m,) + p.shape), params)
+
+
+def masked_fedavg(stacked: Params, a_mask: jax.Array) -> Params:
+    """Masked FedAvg over the stacked client axis (eq. after Step 3)."""
+    wsum = jnp.maximum(jnp.sum(a_mask), 1.0)
+    return jax.tree.map(lambda p: jnp.tensordot(a_mask, p, axes=1) / wsum,
+                        stacked)
+
+
+def _phase_runner(phase: PhaseSpec, n: int, batch_size: int, e_max: int):
+    """Per-client masked E_max-scan of SGD on the phase's local_step loss."""
+    def run(w, data_m, target_m, e_steps, key_m):
+        steps = jnp.arange(e_max)
+
+        def step(carry, i):
+            w, k = carry
+            k, sk = jax.random.split(k)
+            idx = jax.random.randint(sk, (batch_size,), 0, n)
+            loss, g = jax.value_and_grad(phase.loss_fn)(
+                w, data_m[idx], target_m[idx])
+            do = (i < e_steps).astype(jnp.float32)
+            w = jax.tree.map(lambda p, gg: p - phase.lr * do * gg, w, g)
+            return (w, k), loss
+
+        (w, _), losses = jax.lax.scan(step, (w, key_m), steps)
+        if phase.loss_over_mask:
+            mask = (steps < e_steps).astype(jnp.float32)
+            loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            loss = jnp.mean(losses)
+        return w, loss
+
+    return run
+
+
+def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
+                   x: jax.Array, y: jax.Array, *, e_max: int,
+                   donate: bool = True, jit: bool = True,
+                   gather: bool = False):
+    """Compile one federated round for `spec` over the fixed client dataset.
+
+    Returns ``round_fn(params_tuple, a_mask, e_steps, key) ->
+    (params_tuple, per_phase_losses)``.  ``e_max`` is the static scan
+    length; ``e_steps`` (traced) masks the tail, so frameworks with adaptive
+    E compile once with ``e_max = sp.E_max`` while fixed-E frameworks pass
+    ``e_max = E`` for an exact-length scan.  With ``jit=False`` the pure
+    function is returned for embedding in a larger program (the campaign
+    runner's whole-training scan).
+
+    ``gather=True`` changes the signature to ``round_fn(params, sel_idx,
+    sel_mask, e_steps, key)``: only the gathered client cohort ``sel_idx``
+    (a fixed-size, possibly padded index vector; pads carry mask 0) is
+    trained.  This is numerically EXACT relative to the full masked round —
+    unselected clients contribute nothing to the masked aggregation or the
+    loss, and the RNG streams are the full per-client split gathered by
+    index — but skips their computation entirely.  The serial trainers keep
+    the full-M round (a varying cohort size would recompile every round);
+    the campaign runner knows the whole schedule up front and exploits it.
+    """
+    M, n = x.shape[0], x.shape[1]
+    y1 = jax.nn.one_hot(y, cfg.n_classes)
+    ctx = {"x": x, "y": y, "y1": y1}
+    runners = [_phase_runner(ph, n, spec.batch_size, e_max)
+               for ph in spec.phases]
+    n_ph = len(spec.phases)
+
+    def _round_core(params: ParamsTuple, ctx_c, a_mask, e_steps, keys):
+        m = ctx_c["x"].shape[0]                 # client-cohort axis length
+        updated: Dict[int, Params] = {}
+        phase_losses = []
+        for pi, ph in enumerate(spec.phases):
+            tgt = ph.target_fn(params, updated, ctx_c)
+            w_rep = replicate(params[ph.param_idx], m)
+            w_new, loss_m = jax.vmap(runners[pi], in_axes=(0, 0, 0, None, 0))(
+                w_rep, ctx_c[ph.data_key], tgt, e_steps, keys[pi])
+            updated[ph.param_idx] = w_new
+            phase_losses.append(loss_m)
+        wsum = jnp.maximum(jnp.sum(a_mask), 1.0)
+        new_params = tuple(
+            masked_fedavg(updated[i], a_mask) if i in updated else params[i]
+            for i in range(len(params)))
+        losses = tuple(jnp.sum(l * a_mask) / wsum for l in phase_losses)
+        return new_params, losses
+
+    if gather:
+        def round_fn(params: ParamsTuple, sel_idx, sel_mask, e_steps, key):
+            # full per-client key split, gathered: stream m is the same
+            # whether or not the other clients are computed
+            keys = jax.random.split(key, n_ph * M).reshape(
+                n_ph, M, -1)[:, sel_idx]
+            ctx_c = {k: v[sel_idx] for k, v in ctx.items()}
+            return _round_core(params, ctx_c, sel_mask, e_steps, keys)
+    else:
+        def round_fn(params: ParamsTuple, a_mask, e_steps, key):
+            keys = jax.random.split(key, n_ph * M).reshape(n_ph, M, -1)
+            return _round_core(params, ctx, a_mask, e_steps, keys)
+
+    if not jit:
+        return round_fn
+    return jax.jit(round_fn, donate_argnums=(0,) if donate else ())
+
+
+# ---------------------------------------------------------------------------
+# Host-side selection / allocation policies (Alg. 1, P2, fixed-K)
+# ---------------------------------------------------------------------------
+
+class FixedKPolicy:
+    """FedAvg / vanilla SFL: K uniformly random clients, uniform bandwidth."""
+
+    def __init__(self, sp: SystemParams, K: int, E: int, seed: int):
+        self.sp, self.K, self.E = sp, K, E
+        self.rng = np.random.default_rng(seed)
+
+    def step(self) -> Tuple[np.ndarray, np.ndarray, int]:
+        a = np.zeros(self.sp.M)
+        a[self.rng.choice(self.sp.M, self.K, replace=False)] = 1.0
+        b = np.where(a > 0, 1.0 / self.K, 0.0)
+        return a, b, self.E
+
+
+class DeadlineFixedEPolicy:
+    """O-RANFed: deadline-aware selection + min-max bandwidth, fixed E."""
+
+    def __init__(self, sp: SystemParams, state: SelectionState, E: int):
+        self.sp, self.state, self.E = sp, state, E
+
+    def step(self) -> Tuple[np.ndarray, np.ndarray, int]:
+        a = select_trainers(self.E, self.sp, self.state)
+        b = solve_bandwidth(a, self.E, self.sp)
+        self.state = update_state(self.state, a, b, self.sp)
+        return a, b, self.E
+
+
+class SplitMeAdaptivePolicy:
+    """SplitMe: Alg. 1 selection + P2 bandwidth/adaptive-E (never increases)."""
+
+    def __init__(self, sp: SystemParams, state: SelectionState, e_initial: int):
+        self.sp, self.state, self.E = sp, state, e_initial
+
+    def step(self) -> Tuple[np.ndarray, np.ndarray, int]:
+        a = select_trainers(self.E, self.sp, self.state)
+        b, self.E, _ = solve_p2(a, self.E, self.sp)
+        self.state = update_state(self.state, a, b, self.sp)
+        return a, b, self.E
+
+
+# ---------------------------------------------------------------------------
+# Per-framework SystemParams derivation (on a private copy)
+# ---------------------------------------------------------------------------
+
+def _derive_splitme(sp: SystemParams, cfg: DNNConfig, n_m: int) -> None:
+    """Smashed-data size, split-model bits and omega from the actual DNN."""
+    d_split = dnn.client_dims(cfg)[-1]
+    pc_c = dnn.param_count_dims(dnn.client_dims(cfg))
+    pc_i = dnn.param_count_dims(dnn.inverse_server_dims(cfg))
+    sp.S_m = np.full(sp.M, n_m * d_split * 32.0)
+    sp.d_model_bits = 32.0 * (pc_c + pc_i)
+    sp.omega = pc_c / (pc_c + pc_i)
+
+
+def _derive_full_model(sp: SystemParams) -> None:
+    """Full-model FL upload: whole model, no smashed data."""
+    sp.omega = 1.0
+    sp.S_m = np.zeros(sp.M)
+
+
+def _derive_no_offload(sp: SystemParams) -> None:
+    """O-RANFed: the client computes BOTH halves locally."""
+    _derive_full_model(sp)
+    sp.Q_C = sp.Q_C + sp.Q_S
+    sp.Q_S = np.zeros(sp.M)
+
+
+def make_policy(name: str, sp: SystemParams, cfg: DNNConfig, *,
+                seed: int = 0, K: int = 10, E: int = 10,
+                e_initial: int = 20, n_samples_per_client: Optional[int] = None
+                ) -> Tuple[SystemParams, Any]:
+    """Copy `sp`, apply the framework's parameter derivation to the copy,
+    and build its selection/allocation policy.
+
+    The initialization ORDER replicates the seed trainers exactly (the
+    parity tests pin it): SplitMe seeds Alg. 1's pessimistic t_max^0 from
+    the caller's generic S_m/omega BEFORE deriving the real sizes, while
+    O-RANFed derives first and seeds the estimate from the derived values.
+    """
+    sp = sp.copy()
+    if name == "splitme":
+        if n_samples_per_client is None:
+            raise ValueError("splitme needs n_samples_per_client for S_m")
+        state = initial_state(sp)
+        _derive_splitme(sp, cfg, n_samples_per_client)
+        return sp, SplitMeAdaptivePolicy(sp, state, e_initial)
+    if name == "fedavg":
+        _derive_full_model(sp)
+        return sp, FixedKPolicy(sp, K, E, seed)
+    if name == "sfl":
+        return sp, FixedKPolicy(sp, K, E, seed)
+    if name == "oranfed":
+        _derive_no_offload(sp)
+        return sp, DeadlineFixedEPolicy(sp, initial_state(sp), E)
+    raise KeyError(f"unknown framework {name!r}; have {framework_names()}")
+
+
+# ---------------------------------------------------------------------------
+# Spec factories (the registry)
+# ---------------------------------------------------------------------------
+
+def _ce_step(cfg: DNNConfig):
+    def loss(w, x_b, y_b):
+        logits = dnn.mlp_forward(w, x_b, cfg.activation)
+        logp = jax.nn.log_softmax(logits, -1)
+        return -jnp.mean(jnp.take_along_axis(logp, y_b[:, None], axis=1))
+    return loss
+
+
+def _mlp_spec(name: str, cfg: DNNConfig, comm_model, *, lr: float,
+              batch_size: int) -> FrameworkSpec:
+    phase = PhaseSpec(
+        name="local", param_idx=0, lr=lr, loss_fn=_ce_step(cfg),
+        data_key="x", target_fn=lambda params, updated, ctx: ctx["y"])
+    return FrameworkSpec(
+        name=name,
+        init_fn=lambda key: (dnn.init_mlp(key, cfg.layer_dims),),
+        phases=(phase,), comm_model=comm_model, batch_size=batch_size,
+        init_key_offset=1)
+
+
+def _make_fedavg(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
+                 **_) -> FrameworkSpec:
+    def comm(a, E, sp):
+        return float(np.sum(a) * sp.d_model_bits)
+    return _mlp_spec("fedavg", cfg, comm, lr=lr, batch_size=batch_size)
+
+
+def _make_sfl(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
+              **_) -> FrameworkSpec:
+    # per local step: smashed up + boundary grads down, one batch each
+    boundary_bits = 2 * batch_size * dnn.client_dims(cfg)[-1] * 32.0
+
+    def comm(a, E, sp):
+        return float(np.sum(a) * (E * boundary_bits
+                                  + sp.omega * sp.d_model_bits))
+    return _mlp_spec("sfl", cfg, comm, lr=lr, batch_size=batch_size)
+
+
+def _make_oranfed(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
+                  **_) -> FrameworkSpec:
+    def comm(a, E, sp):
+        return float(np.sum(a) * sp.d_model_bits)
+    return _mlp_spec("oranfed", cfg, comm, lr=lr, batch_size=batch_size)
+
+
+def _make_splitme(cfg: DNNConfig, *, lr_c: float = 0.05, lr_s: float = 0.02,
+                  temperature: float = 2.0, batch_size: int = 32,
+                  masked_loss_metric: bool = False, **_) -> FrameworkSpec:
+    """SplitMe spec.  ``masked_loss_metric=False`` reproduces the seed
+    trainer's loss metric (mean over the full E_max scan, frozen tail
+    included) and requires ``e_max = sp.E_max``; ``True`` averages over the
+    executed steps only, which lets the campaign runner scan exactly
+    ``max(schedule E)`` steps.  The trained parameters are identical either
+    way (masked updates are exact no-ops)."""
+    tau = temperature
+
+    def client_step(w, x_b, t_b):
+        # f_C = D_KL(c(X) ‖ sg[s⁻¹(Y)])  (eq. 5, client side)
+        return mutual.client_loss(dnn.client_forward(w, x_b, cfg), t_b, tau)
+
+    def server_step(w, y1_b, t_b):
+        # f_S = D_KL(s⁻¹(Y) ‖ sg[c(X)])  (eq. 5, server side)
+        return mutual.server_loss(
+            dnn.inverse_server_forward(w, y1_b, cfg), t_b, tau)
+
+    def client_targets(params, updated, ctx):
+        # Step 1: download s⁻¹(Y_m) once — fixed targets for the round
+        return jax.vmap(
+            lambda y1m: dnn.inverse_server_forward(params[1], y1m, cfg)
+        )(ctx["y1"])
+
+    def server_targets(params, updated, ctx):
+        # Step 3: upload c(X_m) once, from the UPDATED per-client weights
+        smashed = jax.vmap(
+            lambda w, xm: dnn.client_forward(w, xm, cfg))(updated[0], ctx["x"])
+        return jax.lax.stop_gradient(smashed)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return (dnn.init_client(k1, cfg), dnn.init_inverse_server(k2, cfg))
+
+    def comm(a, E, sp):
+        return float(np.sum(a * (sp.S_m + sp.omega * sp.d_model_bits)))
+
+    return FrameworkSpec(
+        name="splitme", init_fn=init,
+        phases=(
+            PhaseSpec("client", 0, lr_c, client_step, "x", client_targets,
+                      loss_over_mask=masked_loss_metric),
+            PhaseSpec("server", 1, lr_s, server_step, "y1", server_targets,
+                      loss_over_mask=masked_loss_metric),
+        ),
+        comm_model=comm, batch_size=batch_size)
+
+
+_REGISTRY: Dict[str, Callable[..., FrameworkSpec]] = {
+    "splitme": _make_splitme,
+    "fedavg": _make_fedavg,
+    "sfl": _make_sfl,
+    "oranfed": _make_oranfed,
+}
+
+
+def framework_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def make_spec(name: str, cfg: DNNConfig, **hyper) -> FrameworkSpec:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown framework {name!r}; have {framework_names()}") from None
+    return factory(cfg, **hyper)

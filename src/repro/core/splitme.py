@@ -11,16 +11,15 @@ Per global round k:
   Final round: the server-side model is recovered analytically
   (repro.core.inversion) — one shot, one communication round.
 
-Mesh mapping: clients are vmapped; under pjit the client axis shards over the
-mesh `data` axis, and every jnp.mean over clients lowers to the cross-rApp
-all-reduce the paper runs over GLOO.  E adapts per round, so the jitted round
-function is compiled with a *static* E_max-step scan and a dynamic step mask
-(recompilation-free adaptive local updates).
+The round hot path (replication, masked E_max-scan, masked FedAvg, RNG
+pre-splitting, parameter-buffer donation) lives in ``repro.core.engine``;
+this class is a thin adapter wiring the engine's "splitme" spec (two coupled
+mutual-learning phases) to Alg. 1/P2 and the paper's metrics.  E adapts per
+round, so the jitted round function is compiled with a *static* E_max-step
+scan and a dynamic step mask (recompilation-free adaptive local updates).
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -28,28 +27,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import dnn, mutual
-from repro.core.allocation import solve_p2
-from repro.core.cost import SystemParams, round_cost, total_time, comm_cost, comp_cost
+from repro.core import dnn, engine
+from repro.core.cost import SystemParams, round_cost, total_time
+from repro.core.engine import RoundMetrics  # re-export (seed import path)
 from repro.core.inversion import invert_inverse_model
-from repro.core.selection import SelectionState, initial_state, select_trainers, update_state
 
-
-@dataclass
-class RoundMetrics:
-    round: int
-    n_selected: int
-    E: int
-    comm_bits: float          # uplink volume this round (all selected)
-    sim_time: float           # eq. 18 latency (s)
-    cost: float               # eq. 20
-    accuracy: float = float("nan")
-    client_loss: float = float("nan")
-    server_loss: float = float("nan")
-
-
-def _sgd(params, grads, lr):
-    return jax.tree.map(lambda p, g: p - lr * g, params, grads)
+__all__ = ["RoundMetrics", "SplitMeTrainer"]
 
 
 class SplitMeTrainer:
@@ -62,117 +45,48 @@ class SplitMeTrainer:
                  temperature: float = 2.0, batch_size: int = 32,
                  e_initial: int = 20, gamma: float = 1e-3, seed: int = 0):
         assert lr_c > lr_s, "Corollary 3: η_C > η_S (B_1 < B_2)"
-        self.cfg, self.sp = cfg, sp
+        self.cfg = cfg
         self.x = jnp.asarray(client_data["x"])      # (M, n, d)
         self.y = jnp.asarray(client_data["y"])      # (M, n)
         self.x_test, self.y_test = map(jnp.asarray, test_data)
-        self.lr_c, self.lr_s, self.tau = lr_c, lr_s, temperature
-        self.bs, self.gamma = batch_size, gamma
+        self.gamma = gamma
+        # private SystemParams copy + Alg. 1/P2 policy (never mutates `sp`)
+        self.sp, self.policy = engine.make_policy(
+            "splitme", sp, cfg, e_initial=e_initial,
+            n_samples_per_client=int(self.x.shape[1]))
         self.key = jax.random.PRNGKey(seed)
-        k1, k2 = jax.random.split(self.key)
-        self.w_c = dnn.init_client(k1, cfg)
-        self.w_s_inv = dnn.init_inverse_server(k2, cfg)
+        self._spec = engine.make_spec(
+            "splitme", cfg, lr_c=lr_c, lr_s=lr_s, temperature=temperature,
+            batch_size=batch_size)
+        self.w_c, self.w_s_inv = self._spec.init_fn(self.key)
         self.E = e_initial
-        self.sel_state: SelectionState = initial_state(sp)
         self.history: List[RoundMetrics] = []
         self._round = 0
-        # smashed-data size per client (bits): n_m × d_split × 32
-        d_split = dnn.client_dims(cfg)[-1]
-        n_m = self.x.shape[1]
-        sp.S_m = np.full(sp.M, n_m * d_split * 32.0)
-        d_bits = 32.0 * (dnn.param_count(self.w_c)
-                         + dnn.param_count(self.w_s_inv))
-        sp.d_model_bits = d_bits
-        sp.omega = dnn.param_count(self.w_c) / (d_bits / 32.0)
-        self._jit_round = jax.jit(functools.partial(
-            self._train_round_impl), static_argnames=())
+        self._round_fn = engine.build_round_fn(
+            self._spec, cfg, self.x, self.y, e_max=self.sp.E_max)
 
     # ------------------------------------------------------------------
-    # jitted per-round training (steps 3-5)
-    # ------------------------------------------------------------------
-    def _train_round_impl(self, w_c, w_s_inv, a_mask, e_steps, key):
-        cfg, tau = self.cfg, self.tau
-        M, n, d = self.x.shape
-        n_cls = cfg.n_classes
-        y_onehot = jax.nn.one_hot(self.y, n_cls)           # (M, n, C)
-
-        def client_local(w, x_m, target_m, key_m):
-            """E masked SGD steps on D_KL(c(X)||s⁻¹(Y))."""
-            def step(carry, i):
-                w, k = carry
-                k, sk = jax.random.split(k)
-                idx = jax.random.randint(sk, (self.bs,), 0, n)
-                def loss_fn(w):
-                    feat = dnn.client_forward(w, x_m[idx], cfg)
-                    return mutual.client_loss(feat, target_m[idx], tau)
-                loss, g = jax.value_and_grad(loss_fn)(w)
-                do = (i < e_steps).astype(jnp.float32)
-                w = jax.tree.map(lambda p, gg: p - self.lr_c * do * gg, w, g)
-                return (w, k), loss
-            (w, _), losses = jax.lax.scan(step, (w, key_m),
-                                          jnp.arange(self.sp.E_max))
-            return w, jnp.mean(losses)
-
-        def server_local(w, y1_m, smashed_m, key_m):
-            """E masked SGD steps on D_KL(s⁻¹(Y)||c(X))."""
-            def step(carry, i):
-                w, k = carry
-                k, sk = jax.random.split(k)
-                idx = jax.random.randint(sk, (self.bs,), 0, n)
-                def loss_fn(w):
-                    inv = dnn.inverse_server_forward(w, y1_m[idx], cfg)
-                    return mutual.server_loss(inv, smashed_m[idx], tau)
-                loss, g = jax.value_and_grad(loss_fn)(w)
-                do = (i < e_steps).astype(jnp.float32)
-                w = jax.tree.map(lambda p, gg: p - self.lr_s * do * gg, w, g)
-                return (w, k), loss
-            (w, _), losses = jax.lax.scan(step, (w, key_m),
-                                          jnp.arange(self.sp.E_max))
-            return w, jnp.mean(losses)
-
-        keys = jax.random.split(key, 2 * M).reshape(2, M, -1)
-        # Step 1: download s⁻¹(Y_m) once (fixed targets for the round)
-        targets = jax.vmap(
-            lambda y1: dnn.inverse_server_forward(w_s_inv, y1, cfg))(y_onehot)
-        # Step 2: per-client local training from the shared global w_C
-        w_c_rep = jax.tree.map(lambda p: jnp.broadcast_to(p, (M,) + p.shape),
-                               w_c)
-        w_c_new, c_loss = jax.vmap(client_local)(w_c_rep, self.x, targets,
-                                                 keys[0])
-        # Step 3: upload c(X_m) once; per-rApp inverse-model training
-        smashed = jax.vmap(lambda w, x: dnn.client_forward(w, x, cfg))(
-            w_c_new, self.x)
-        smashed = jax.lax.stop_gradient(smashed)
-        w_s_rep = jax.tree.map(lambda p: jnp.broadcast_to(p, (M,) + p.shape),
-                               w_s_inv)
-        w_s_new, s_loss = jax.vmap(server_local)(w_s_rep, y_onehot, smashed,
-                                                 keys[1])
-        # Step 5: masked FedAvg over A_t  (the cross-rApp all-reduce)
-        wsum = jnp.maximum(jnp.sum(a_mask), 1.0)
-        agg = lambda stk: jax.tree.map(
-            lambda p: jnp.tensordot(a_mask, p, axes=1) / wsum, stk)
-        return (agg(w_c_new), agg(w_s_new),
-                jnp.sum(c_loss * a_mask) / wsum,
-                jnp.sum(s_loss * a_mask) / wsum)
+    def _jit_round(self, w_c, w_s_inv, a_mask, e_steps, key):
+        """Seed-compatible signature over the engine round (steps 3-5)."""
+        (w_c, w_s_inv), (closs, sloss) = self._round_fn(
+            (w_c, w_s_inv), a_mask, e_steps, key)
+        return w_c, w_s_inv, closs, sloss
 
     # ------------------------------------------------------------------
     def run_round(self, eval_acc: bool = False) -> RoundMetrics:
         sp = self.sp
-        # P1: deadline-aware selection with current E
-        a = select_trainers(self.E, sp, self.sel_state)
-        # P2: bandwidth + adaptive E (guarded: never exceeds E_last)
-        b, self.E, _ = solve_p2(a, self.E, sp)
-        self.sel_state = update_state(self.sel_state, a, b, sp)
+        # P1 + P2: deadline-aware selection, bandwidth, adaptive E
+        a, b, self.E = self.policy.step()
 
         self.key, sub = jax.random.split(self.key)
         self.w_c, self.w_s_inv, closs, sloss = self._jit_round(
             self.w_c, self.w_s_inv, jnp.asarray(a, jnp.float32),
             jnp.asarray(self.E), sub)
 
-        comm_bits = float(np.sum(a * (sp.S_m + sp.omega * sp.d_model_bits)))
         m = RoundMetrics(
             round=self._round, n_selected=int(a.sum()), E=self.E,
-            comm_bits=comm_bits, sim_time=total_time(a, b, self.E, sp),
+            comm_bits=self._spec.comm_model(a, self.E, sp),
+            sim_time=total_time(a, b, self.E, sp),
             cost=round_cost(a, b, self.E, sp),
             client_loss=float(closs), server_loss=float(sloss))
         if eval_acc:

@@ -1,0 +1,247 @@
+"""Vmapped multi-seed / multi-config campaign runner.
+
+Batches many independent training runs — different model-init / batching
+RNG seeds over the same data — through shared compiled round functions,
+``vmap``-ed over the seed axis.
+
+This works because the system-side trajectory (A_t, b_t, E_t) of every §V
+framework is independent of the learned parameters — Alg. 1 / P2 depend
+only on SystemParams and realized comm times — so it is precomputed
+host-side once (`plan_schedule`) and shared by all seeds, exactly matching
+what each serial trainer would have done.  Knowing the schedule up front
+buys two exact optimizations the serial trainers cannot apply (a varying
+cohort would recompile every round): each round gathers only its selected
+client cohort (engine ``gather`` mode) and scans exactly E_t local steps,
+skipping unselected clients and the frozen scan tail entirely.  Rounds
+sharing a (cohort-bucket, E) shape share one compiled vmapped round.
+Trained parameters are numerically identical to serial engine-trainer runs
+(tests/test_campaign.py).
+
+Multi-config campaigns: run one campaign per SystemParams variant
+(`run_config_sweep`); each variant gets its own schedule but reuses the
+framework spec, and all seeds within a variant are vmapped.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.splitme_dnn import DNNConfig
+from repro.core import dnn, engine
+from repro.core.cost import SystemParams, round_cost, total_time
+from repro.core.engine import RoundMetrics
+from repro.core.inversion import invert_inverse_model
+
+
+@dataclass
+class RoundSchedule:
+    """Precomputed system-side trajectory, shared by every seed."""
+    a: np.ndarray      # (R, M) binary selection masks
+    b: np.ndarray      # (R, M) bandwidth fractions
+    E: np.ndarray      # (R,)   local-update counts
+
+    @property
+    def rounds(self) -> int:
+        return len(self.E)
+
+
+@dataclass
+class CampaignResult:
+    framework: str
+    seeds: Tuple[int, ...]
+    schedule: RoundSchedule
+    params: Any               # params tuple, each leaf stacked over seeds
+    losses: np.ndarray        # (n_seeds, rounds, n_phases)
+    metrics: List[RoundMetrics]   # system metrics per round (seed-invariant)
+    accuracy: Optional[np.ndarray] = None   # (n_seeds,) if test_data given
+
+    def params_for(self, i: int):
+        """The i-th seed's params tuple (unstacked)."""
+        return jax.tree.map(lambda p: p[i], self.params)
+
+
+def plan_schedule(framework: str, sp: SystemParams, cfg: DNNConfig,
+                  rounds: int, *, policy_seed: int = 0, K: int = 10,
+                  E: int = 10, e_initial: int = 20,
+                  n_samples_per_client: Optional[int] = None
+                  ) -> Tuple[SystemParams, RoundSchedule]:
+    """Run the framework's host-side policy for `rounds` rounds.
+
+    Returns the framework's derived SystemParams copy and the schedule.
+    """
+    sp, policy = engine.make_policy(
+        framework, sp, cfg, seed=policy_seed, K=K, E=E, e_initial=e_initial,
+        n_samples_per_client=n_samples_per_client)
+    a_l, b_l, e_l = [], [], []
+    for _ in range(rounds):
+        a, b, e = policy.step()
+        a_l.append(a), b_l.append(b), e_l.append(e)
+    return sp, RoundSchedule(a=np.stack(a_l), b=np.stack(b_l),
+                             E=np.asarray(e_l, np.int32))
+
+
+def _bucket_cohorts(values, cap: int, max_exact: int = 8) -> Dict[int, int]:
+    """Map each schedule value (cohort size or E) to a compile-shape bucket.
+
+    Few distinct values → exact shapes (one compile each); many → round up
+    to powers of two (bounds the number of compilations at log2(cap))."""
+    distinct = sorted(set(int(c) for c in values))
+    if len(distinct) <= max_exact:
+        return {k: k for k in distinct}
+    buckets, b = [], 1
+    while b < cap:
+        buckets.append(b)
+        b *= 2
+    buckets.append(cap)
+    return {k: next(x for x in buckets if x >= k) for k in distinct}
+
+
+def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
+                 client_data: Dict[str, np.ndarray], *, rounds: int,
+                 seeds: Sequence[int], test_data=None,
+                 K: int = 10, E: int = 10, e_initial: int = 20,
+                 policy_seed: Optional[int] = None,
+                 **hyper) -> CampaignResult:
+    """Train `len(seeds)` independent runs of `framework` in one compiled
+    scan-over-rounds, vmapped over the seed axis.
+
+    The per-seed RNG chains mirror the serial trainers exactly
+    (PRNGKey(seed [+ init offset]) for init, the same split chain per
+    round), so seed s here equals a serial run of the engine-backed trainer
+    with seed=s.  The single A_t/b_t/E_t schedule is shared by all seeds;
+    for frameworks whose selection is itself randomized (FedAvg/SFL) it is
+    drawn from ``policy_seed`` (default: min(seeds)).  ``hyper`` forwards
+    to the framework spec factory (lr / lr_c / lr_s / temperature /
+    batch_size).
+    """
+    x = jnp.asarray(client_data["x"])
+    y = jnp.asarray(client_data["y"])
+    if x.shape[0] != sp.M:
+        # the gathered round would silently clamp out-of-range client
+        # indices under jit; fail loudly instead
+        raise ValueError(f"client_data has {x.shape[0]} clients but "
+                         f"SystemParams.M={sp.M}")
+    n_m = int(x.shape[1])
+    if policy_seed is None:
+        policy_seed = min(seeds)
+    sp, sched = plan_schedule(framework, sp, cfg, rounds, K=K, E=E,
+                              e_initial=e_initial, policy_seed=policy_seed,
+                              n_samples_per_client=n_m)
+    # masked_loss_metric: average losses over the executed steps only, so a
+    # round's scan can be exactly E_t steps long.  Trained params are
+    # identical to the serial trainers (masked updates are exact no-ops);
+    # only SplitMe's *loss metric* differs from the seed quirk of averaging
+    # over the full E_max scan.
+    spec = engine.make_spec(framework, cfg, masked_loss_metric=True, **hyper)
+
+    # Knowing the whole schedule, each round trains only its selected
+    # cohort (gathered, padded to a shape bucket) for exactly E_t steps —
+    # numerically exact vs the full masked round, but skipping the
+    # unselected clients and the frozen scan tail entirely.  Rounds sharing
+    # a (cohort-bucket, E) shape share one compiled vmapped round.
+    counts = sched.a.sum(axis=1).astype(int)
+    size_of = _bucket_cohorts(counts, sp.M)
+    # E is bucketed like cohort sizes (scan e_bucket steps, mask the tail —
+    # exact) so adaptive-E frameworks compile at most max_exact/log2 rounds
+    e_of = _bucket_cohorts(sched.E, int(sp.E_max))
+    fns: Dict[Tuple[int, int], Any] = {}
+
+    def round_exec(k_bucket: int, e_bucket: int):
+        if (k_bucket, e_bucket) not in fns:
+            raw = engine.build_round_fn(spec, cfg, x, y,
+                                        e_max=max(1, e_bucket),
+                                        jit=False, gather=True)
+            fns[k_bucket, e_bucket] = jax.jit(
+                jax.vmap(raw, in_axes=(0, None, None, None, 0)),
+                donate_argnums=(0,))
+        return fns[k_bucket, e_bucket]
+
+    init_keys = jnp.stack([jax.random.PRNGKey(s + spec.init_key_offset)
+                           for s in seeds])
+    key_arr = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    params = jax.vmap(spec.init_fn)(init_keys)
+    loss_rows = []
+    for r in range(rounds):
+        k_r, e_r = int(counts[r]), int(sched.E[r])
+        kb = size_of[k_r]
+        idx = np.zeros(kb, np.int32)
+        mask = np.zeros(kb, np.float32)
+        idx[:k_r] = np.nonzero(sched.a[r])[0]   # pads index client 0 and
+        mask[:k_r] = 1.0                        # carry mask weight 0
+        # per-seed key chains advance exactly like the serial trainers
+        ks = jax.vmap(jax.random.split)(key_arr)
+        key_arr, subs = ks[:, 0], ks[:, 1]
+        params, loss_r = round_exec(kb, e_of[e_r])(
+            params, jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(e_r),
+            subs)
+        loss_rows.append(loss_r)
+
+    losses = np.stack([np.stack([np.asarray(l) for l in row], axis=-1)
+                       for row in loss_rows], axis=1)  # (S, R, n_phases)
+    metrics = []
+    for r in range(rounds):
+        a, b, e = sched.a[r], sched.b[r], int(sched.E[r])
+        metrics.append(RoundMetrics(
+            round=r, n_selected=int(a.sum()), E=e,
+            comm_bits=spec.comm_model(a, e, sp),
+            sim_time=total_time(a, b, e, sp),
+            cost=round_cost(a, b, e, sp),
+            client_loss=float(losses[:, r, 0].mean()),
+            server_loss=float(losses[:, r, 1].mean())
+            if losses.shape[-1] > 1 else float("nan")))
+    result = CampaignResult(framework=framework, seeds=tuple(seeds),
+                            schedule=sched, params=params, losses=losses,
+                            metrics=metrics)
+    if test_data is not None:
+        result.accuracy = evaluate_campaign(result, cfg, test_data,
+                                            client_data=client_data)
+    return result
+
+
+def evaluate_campaign(result: CampaignResult, cfg: DNNConfig, test_data,
+                      client_data=None, gamma: float = 1e-3) -> np.ndarray:
+    """Per-seed test accuracy of a finished campaign.
+
+    Full-model frameworks evaluate the aggregated MLP directly (vmapped over
+    the seed axis).  SplitMe first recovers each seed's server model via the
+    one-shot analytic inversion (Step 4), which needs the client data for
+    the Gram sums.
+    """
+    x_test, y_test = map(jnp.asarray, test_data)
+    if result.framework != "splitme":
+        (params,) = (result.params if isinstance(result.params, tuple)
+                     else (result.params,))
+        logits = jax.vmap(
+            lambda w: dnn.mlp_forward(w, x_test, cfg.activation))(params)
+        return np.asarray(
+            jnp.mean(jnp.argmax(logits, -1) == y_test[None, :], axis=-1),
+            dtype=np.float64)
+    if client_data is None:
+        raise ValueError("splitme evaluation needs client_data for Step 4")
+    x = jnp.asarray(client_data["x"])
+    y1 = jax.nn.one_hot(jnp.asarray(client_data["y"]), cfg.n_classes)
+    accs = []
+    for i in range(len(result.seeds)):
+        w_c, w_s_inv = result.params_for(i)
+        smashed = jax.vmap(lambda xm: dnn.client_forward(w_c, xm, cfg))(x)
+        w_s = invert_inverse_model(
+            w_s_inv, smashed.reshape(-1, smashed.shape[-1]),
+            y1.reshape(-1, cfg.n_classes), cfg, gamma=gamma)
+        logits = dnn.full_forward(w_c, w_s, x_test, cfg)
+        accs.append(float(jnp.mean(jnp.argmax(logits, -1) == y_test)))
+    return np.asarray(accs)
+
+
+def run_config_sweep(framework: str, cfg: DNNConfig,
+                     system_params: Sequence[SystemParams],
+                     client_data, *, rounds: int, seeds: Sequence[int],
+                     test_data=None, **kw) -> List[CampaignResult]:
+    """Multi-config campaign: one vmapped multi-seed campaign per
+    SystemParams variant (each variant has its own A_t/b_t/E_t schedule)."""
+    return [run_campaign(framework, cfg, sp, client_data, rounds=rounds,
+                         seeds=seeds, test_data=test_data, **kw)
+            for sp in system_params]

@@ -2,6 +2,8 @@
 (paper eq. 22 / §IV-D), property-based via hypothesis."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.allocation import solve_bandwidth, solve_p2

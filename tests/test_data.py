@@ -1,5 +1,8 @@
 """Synthetic COMMAG O-RAN dataset properties."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.data import oran

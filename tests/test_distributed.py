@@ -1,4 +1,5 @@
 """Distributed SplitMe/SFL rounds (shard_map) + MoE dispatch variants."""
+# (mesh construction feature-detects jax.sharding.AxisType; see launch/mesh)
 import jax
 import jax.numpy as jnp
 import numpy as np

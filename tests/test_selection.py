@@ -1,5 +1,8 @@
 """Algorithm 1 (deadline-aware trainer selection) properties."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cost import SystemParams

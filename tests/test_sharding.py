@@ -1,6 +1,8 @@
 """Partition-rule properties: divisibility guards, spec shapes (hypothesis)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 jax = pytest.importorskip("jax")

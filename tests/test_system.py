@@ -10,6 +10,8 @@ from repro.core.baselines import FedAvgTrainer, ORANFedTrainer, SFLTrainer
 from repro.core.cost import SystemParams
 from repro.core.splitme import SplitMeTrainer
 
+pytestmark = pytest.mark.slow        # full multi-framework training campaign
+
 ROUNDS = 6
 
 
