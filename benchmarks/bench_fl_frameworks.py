@@ -84,14 +84,25 @@ def run(fast: bool = False):
         rows.append((f"fig4b_cost_{name}", wall_us,
                      f"resource_cost={total_cost:.1f}"))
     # ------------------------------------------------------------------
-    # Vmapped multi-seed campaign vs the same runs done serially
+    # Multi-seed campaign execution modes:
+    #   python-loop      : PR-1 serial engine trainers, one per seed (the
+    #                      per-round float() metric pulls included) AND the
+    #                      PR-1 vmapped runner with its per-round python loop
+    #   scanned          : lax.scan over rounds, device-resident metric
+    #                      buffers, ONE host transfer per campaign
+    #   scanned+sharded  : the same scan over shard_map engine rounds
+    #                      (clients sharded over the mesh data axes)
+    # Each mode reports rounds/sec (aggregate seed-rounds) and the number of
+    # device→host metric transfers it performed.
     # ------------------------------------------------------------------
     import jax
 
     from repro.launch import campaign as camp
+    from repro.launch.mesh import make_host_mesh
 
     n_seeds = 4
     camp_rounds = 8 if fast else 12
+    run_rounds = n_seeds * camp_rounds
     # one kwargs dict per framework, shared by the serial trainers and the
     # campaign so the two paths always train the same workload
     camp_specs = (("fedavg", FedAvgTrainer, {"K": 10, "E": 10}),
@@ -105,27 +116,47 @@ def run(fast: bool = False):
                 tr.run_round()
         serial_s = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        res = camp.run_campaign(name, DNN10, SystemParams(seed=0), cd,
-                                rounds=camp_rounds,
-                                seeds=tuple(range(n_seeds)), **kw)
-        jax.block_until_ready(res.params)
-        vmap_s = time.perf_counter() - t0
-
-        speedup = serial_s / vmap_s
-        run_rounds = n_seeds * camp_rounds
+        modes = {"python_loop": dict(scan=False),
+                 "scanned": dict(scan=True),
+                 "scanned_sharded": dict(scan=True, mesh=make_host_mesh())}
+        mode_stats = {}
+        res = None
+        for mode, mkw in modes.items():
+            before = camp.HOST_TRANSFERS
+            t0 = time.perf_counter()
+            res = camp.run_campaign(name, DNN10, SystemParams(seed=0), cd,
+                                    rounds=camp_rounds,
+                                    seeds=tuple(range(n_seeds)), **kw, **mkw)
+            jax.block_until_ready(res.params)
+            dt = time.perf_counter() - t0
+            mode_stats[mode] = {
+                "s": dt,
+                "rounds_per_sec": run_rounds / dt,
+                "host_transfers": camp.HOST_TRANSFERS - before,
+            }
+        scanned_speedup = serial_s / mode_stats["scanned"]["s"]
         summary[f"campaign_{name}"] = {
             "seeds": n_seeds, "rounds": camp_rounds,
-            "serial_s": serial_s, "vmap_s": vmap_s,
-            "aggregate_speedup": speedup,
+            "serial_python_loop_s": serial_s,
+            "serial_rounds_per_sec": run_rounds / serial_s,
+            "serial_host_transfers_per_round": 1,   # float() pull each round
+            "modes": mode_stats,
+            "scanned_speedup_vs_serial_python_loop": scanned_speedup,
+            "scanned_speedup_vs_vmapped_python_loop":
+                mode_stats["python_loop"]["s"] / mode_stats["scanned"]["s"],
             "final_loss_per_seed": res.losses[:, -1, 0].tolist(),
         }
         rows.append((f"campaign_serial{n_seeds}_{name}",
                      serial_s / run_rounds * 1e6,
-                     f"{n_seeds}x{camp_rounds} rounds serial"))
-        rows.append((f"campaign_vmap{n_seeds}_{name}",
-                     vmap_s / run_rounds * 1e6,
-                     f"aggregate_speedup={speedup:.2f}x"))
+                     f"{n_seeds}x{camp_rounds} rounds serial python loop"))
+        for mode, st in mode_stats.items():
+            rows.append((f"campaign_{mode}{n_seeds}_{name}",
+                         st["s"] / run_rounds * 1e6,
+                         f"rounds_per_sec={st['rounds_per_sec']:.2f};"
+                         f"host_transfers={st['host_transfers']}"))
+        rows.append((f"campaign_scan_speedup_{name}",
+                     mode_stats["scanned"]["s"] / run_rounds * 1e6,
+                     f"scanned_vs_python_loop={scanned_speedup:.2f}x"))
 
     RESULTS.mkdir(exist_ok=True, parents=True)
     (RESULTS / "fl_frameworks.json").write_text(json.dumps(summary, indent=1))

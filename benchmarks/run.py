@@ -3,7 +3,9 @@
     PYTHONPATH=src python -m benchmarks.run [--fast]
 
 Prints ``name,us_per_call,derived`` CSV rows (paper artifact -> bench module
-mapping in DESIGN.md §6)."""
+mapping in DESIGN.md §6).  ``scripts/ci.sh`` chains the fast
+(``-m "not slow"``) test suite with ``--fast --only fl_frameworks`` so the
+perf artifacts in benchmarks/results/ stay reproducible in CI."""
 from __future__ import annotations
 
 import argparse

@@ -8,10 +8,13 @@ in §V-B), checkpoints (w_C, w_S⁻¹) every 10 rounds, performs the final
 analytic inversion, and (optionally) runs the three baselines for the same
 wall-clock comparison the paper plots in Fig. 4.
 
-With ``--seeds N`` (N > 1) the run goes through the vmapped multi-seed
+With ``--seeds N`` (N > 1) the run goes through the scanned multi-seed
 campaign runner instead: N independent seeds train through one compiled
-round function per cohort shape, and the per-seed final accuracies are
-reported (mean ± std) — the multi-seed error bars the paper omits.
+lax.scan-over-rounds per shape bucket, all metrics (and the fused
+evaluation — ``--eval-every K`` evaluates every K rounds inside the scan)
+stay on the device until ONE final host transfer, and the per-seed final
+accuracies are reported (mean ± std) — the multi-seed error bars the paper
+omits.
 """
 import argparse
 import copy
@@ -34,8 +37,12 @@ def main():
     ap.add_argument("--baselines", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/splitme_ckpt")
     ap.add_argument("--seeds", type=int, default=1,
-                    help="N>1: vmapped multi-seed campaign instead of one "
+                    help="N>1: scanned multi-seed campaign instead of one "
                          "serial run")
+    ap.add_argument("--eval-every", type=int, default=None,
+                    help="campaign mode: fuse an eval round into the scan "
+                         "every K rounds (accuracy curve, zero extra host "
+                         "syncs)")
     args = ap.parse_args()
 
     X, y = oran.generate(n_per_class=2000, seed=0)
@@ -57,7 +64,8 @@ def main():
             t0 = time.time()
             res = campaign.run_campaign(name, DNN10, SystemParams(seed=0),
                                         clients, rounds=rounds, seeds=seeds,
-                                        test_data=(Xte, yte), **kw)
+                                        test_data=(Xte, yte),
+                                        eval_every=args.eval_every, **kw)
             acc = res.accuracy
             print(f"[{name}] {len(seeds)} seeds x {rounds} rounds: "
                   f"acc={acc.mean():.3f}±{acc.std():.3f} "
@@ -65,6 +73,10 @@ def main():
                   f"comm={sum(m.comm_bits for m in res.metrics) / 8e6:.1f}MB "
                   f"sim_time={sum(m.sim_time for m in res.metrics):.2f}s "
                   f"wall={time.time() - t0:.0f}s")
+            if args.eval_every:
+                curve = [(m.round, round(m.accuracy, 3))
+                         for m in res.metrics if m.accuracy == m.accuracy]
+                print(f"[{name}] fused-eval accuracy curve: {curve}")
         return
 
     tr = SplitMeTrainer(DNN10, sp, clients, (Xte, yte), seed=0)

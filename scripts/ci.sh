@@ -1,0 +1,16 @@
+#!/usr/bin/env sh
+# Fast CI smoke: the non-slow test suite plus the FL-framework perf bench
+# in --fast mode, so the perf artifacts in benchmarks/results/ stay
+# reproducible on every change.
+#
+#     sh scripts/ci.sh
+set -eu
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== pytest -m 'not slow' =="
+python -m pytest -q -m "not slow"
+
+echo "== benchmarks (fast, fl_frameworks) =="
+python -m benchmarks.run --fast --only fl_frameworks

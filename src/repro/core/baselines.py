@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import dnn, engine
+from repro.core import engine
 from repro.core.cost import SystemParams, round_cost, total_time
 from repro.core.engine import RoundMetrics
 
@@ -54,6 +54,9 @@ class _FLBase:
         # fixed E → exact-length scan (mask is all-ones, compiled once)
         self._round_fn = engine.build_round_fn(self._spec, cfg, self.x,
                                                self.y, e_max=E)
+        # jitted test accuracy, compiled once and reused each eval round
+        self._eval_fn = engine.build_eval_fn(self._spec, cfg, self.x_test,
+                                             self.y_test)
 
     def run_round(self, eval_acc: bool = False) -> RoundMetrics:
         a, b, self.E = self.policy.step()
@@ -64,8 +67,7 @@ class _FLBase:
         return self._record(a, b, eval_acc, float(loss))
 
     def evaluate(self) -> float:
-        logits = dnn.mlp_forward(self.params, self.x_test, self.cfg.activation)
-        return float(jnp.mean(jnp.argmax(logits, -1) == self.y_test))
+        return float(self._eval_fn((self.params,)))
 
     def _record(self, a, b, eval_acc, loss) -> RoundMetrics:
         m = RoundMetrics(

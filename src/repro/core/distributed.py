@@ -1,182 +1,60 @@
-"""SplitMe on the production mesh (shard_map) — the paper's communication
-pattern as real collectives, plus the vanilla-SFL baseline step for the
-dry-run comparison.
+"""Mesh adapters over the unified engine (paper communication pattern as
+real collectives).
 
-Mapping (DESIGN.md §3/§5):
-* near-RT-RICs (clients) shard over the mesh ``data`` axis (and ``pod``):
-  each device owns M/|data| clients' datasets and their per-client model
-  replicas.
-* **SplitMe round**: E local steps on both sides run with ZERO cross-client
-  traffic; the only collectives are (i) the per-round FedAvg ``psum`` of
-  (w_C, w_S⁻¹) and (ii) at the very end, the Gram-sum ``psum`` of the
-  analytic inversion (eq. 9) — the paper's "one communication per round".
-* **Vanilla SFL round** (baseline): every local update moves the smashed
-  batch to the server tier and the boundary gradient back.  On the mesh the
-  server tier is the ``model``/remote axis; we express the per-batch
-  boundary exchange as an explicit ``all_gather``+``psum_scatter`` pair per
-  local step, which is exactly the traffic SplitMe deletes.  The dry-run's
-  §Dry-run table shows SplitMe's collective bytes independent of E while
-  SFL's scale linearly with E.
+This module used to hand-write the shard_map SplitMe round; that hot path
+now lives in ``repro.core.engine.build_sharded_round_fn`` (clients sharded
+over the mesh ``data``/``pod`` axes, masked-FedAvg psum as the round's only
+cross-device collective).  What remains here:
+
+* ``make_splitme_round`` — the old (w_c, w_s⁻¹, x, y1, key) signature as a
+  thin adapter over the engine's "splitme" spec, kept for the fl_dryrun
+  lowering and external callers,
+* ``make_distributed_inversion`` — Step 4 on the mesh: per-shard Gram
+  partials + psum (eq. 9 exactly), a thin adapter over
+  ``repro.core.inversion``.
+
+The hand-written vanilla-SFL round (per-step boundary ``ppermute`` — the
+traffic SplitMe deletes) is dry-run collective accounting, not a production
+path, and moved to ``repro.launch.fl_dryrun``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import dnn, mutual
-
-
-def _client_axes(mesh: Mesh):
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-
-
-def _steps_scan(step, carry, keys, unroll_steps: bool):
-    """lax.scan over local updates, or python-unrolled (the dry-run needs
-    unrolled bodies so per-step collectives are counted E times)."""
-    if not unroll_steps:
-        (carry), losses = jax.lax.scan(step, carry, keys)
-        return carry, losses
-    losses = []
-    for i in range(keys.shape[0]):
-        carry, l = step(carry, keys[i])
-        losses.append(l)
-    return carry, jnp.stack(losses)
+from repro.core import engine
+from repro.core.engine import client_axes as _client_axes  # re-export
 
 
 def make_splitme_round(cfg: DNNConfig, mesh: Mesh, *, n_clients: int,
                        samples_per_client: int, E: int, batch: int = 32,
                        lr_c: float = 0.05, lr_s: float = 0.02,
                        temperature: float = 2.0, unroll_steps: bool = False):
-    """Returns (round_fn, in_specs) running one SplitMe global round under
-    shard_map with clients sharded over the data axes."""
-    axes = _client_axes(mesh)
+    """One SplitMe global round under shard_map, clients sharded over the
+    mesh data axes — engine-backed.
 
-    def local_round(w_c, w_s_inv, x, y1, key):
-        """Per-device shard: (m_local, n, d) client datasets."""
-        m_local = x.shape[0]
+    Returns ``round_fn(w_c, w_s_inv, x, y1, key) -> (w_c', w_s_inv')``
+    training ALL clients (the dry-run cohort).  E local steps on both sides
+    run with ZERO cross-client traffic; the only collective is the per-round
+    FedAvg ``psum`` — the paper's "one communication per round".
+    """
+    del samples_per_client  # shapes come from the data argument
+    spec = engine.make_spec("splitme", cfg, lr_c=lr_c, lr_s=lr_s,
+                            temperature=temperature, batch_size=batch,
+                            masked_loss_metric=True)
+    rf = engine.build_sharded_round_fn(spec, cfg, mesh, n_clients=n_clients,
+                                       e_max=E, jit=False,
+                                       unroll_steps=unroll_steps)
 
-        def per_client(x_m, y1_m, key_m):
-            target = dnn.inverse_server_forward(w_s_inv, y1_m, cfg)
+    def round_fn(w_c, w_s_inv, x, y1, key):
+        y = jnp.argmax(y1, -1).astype(jnp.int32)
+        a_mask = jnp.ones((n_clients,), jnp.float32)
+        (w_c2, w_s2), _ = rf((w_c, w_s_inv), x, y, a_mask,
+                             jnp.asarray(E, jnp.int32), key)
+        return w_c2, w_s2
 
-            def client_step(carry, k):
-                w, = carry
-                idx = jax.random.randint(k, (batch,), 0, x_m.shape[0])
-                loss, g = jax.value_and_grad(
-                    lambda w: mutual.client_loss(
-                        dnn.client_forward(w, x_m[idx], cfg), target[idx],
-                        temperature))(w)
-                return (jax.tree.map(lambda p, gg: p - lr_c * gg, w, g),), loss
-
-            (w_cm,), _ = _steps_scan(client_step, (w_c,),
-                                     jax.random.split(key_m, E),
-                                     unroll_steps)
-            smashed = jax.lax.stop_gradient(
-                dnn.client_forward(w_cm, x_m, cfg))
-
-            def server_step(carry, k):
-                w, = carry
-                idx = jax.random.randint(k, (batch,), 0, x_m.shape[0])
-                loss, g = jax.value_and_grad(
-                    lambda w: mutual.server_loss(
-                        dnn.inverse_server_forward(w, y1_m[idx], cfg),
-                        smashed[idx], temperature))(w)
-                return (jax.tree.map(lambda p, gg: p - lr_s * gg, w, g),), loss
-
-            (w_sm,), _ = _steps_scan(server_step, (w_s_inv,),
-                                     jax.random.split(jax.random.fold_in(
-                                         key_m, 1), E), unroll_steps)
-            return w_cm, w_sm
-
-        keys = jax.random.split(key, m_local)
-        w_c_new, w_s_new = jax.vmap(per_client)(x, y1, keys)
-        # local mean, then THE round's only collective: cross-client psum
-        mean_local = lambda t: jax.tree.map(lambda a: jnp.mean(a, 0), t)
-        w_c_new, w_s_new = mean_local(w_c_new), mean_local(w_s_new)
-        scale = 1.0 / jax.lax.psum(1.0, axes)
-        w_c_agg = jax.tree.map(
-            lambda a: jax.lax.psum(a * scale, axes), w_c_new)
-        w_s_agg = jax.tree.map(
-            lambda a: jax.lax.psum(a * scale, axes), w_s_new)
-        return w_c_agg, w_s_agg
-
-    spec_clients = P(axes)          # shard leading client dim
-    spec_rep = P()
-    from jax.experimental.shard_map import shard_map
-    round_fn = shard_map(
-        local_round, mesh=mesh,
-        in_specs=(spec_rep, spec_rep, spec_clients, spec_clients, spec_rep),
-        out_specs=(spec_rep, spec_rep), check_rep=False)
     return round_fn
-
-
-def make_sfl_round(cfg: DNNConfig, mesh: Mesh, *, n_clients: int,
-                   samples_per_client: int, E: int, batch: int = 32,
-                   lr: float = 0.05, unroll_steps: bool = False):
-    """Vanilla SFL (SplitFed) round with the per-batch boundary exchange
-    made explicit: each local step all-gathers the smashed batch to the
-    server tier and scatter-reduces the boundary gradient back — E times
-    per round per client (the traffic SplitMe eliminates)."""
-    axes = _client_axes(mesh)
-
-    def local_round(w_c, w_s, x, y, key):
-        def per_client(x_m, y_m, key_m):
-            def step(carry, k):
-                wc, ws = carry
-                idx = jax.random.randint(k, (batch,), 0, x_m.shape[0])
-                xb, yb = x_m[idx], y_m[idx]
-
-                def client_half(wc):
-                    return dnn.client_forward(wc, xb, cfg)
-
-                smashed, vjp_c = jax.vjp(client_half, wc)
-                # --- boundary exchange #1: smashed data -> server tier ----
-                # point-to-point xApp -> rApp transfer = collective-permute
-                size = mesh.shape["model"]
-                up = [(i, (i + 1) % size) for i in range(size)]
-                down = [(i, (i - 1) % size) for i in range(size)]
-                smashed_srv = jax.lax.ppermute(smashed, "model", up)
-
-                def server_loss(ws, h):
-                    logits = dnn.server_forward(ws, h, cfg)
-                    logp = jax.nn.log_softmax(logits, -1)
-                    return -jnp.mean(jnp.take_along_axis(
-                        logp, yb[:, None], axis=1))
-
-                loss, (g_ws, g_h) = jax.value_and_grad(
-                    server_loss, argnums=(0, 1))(ws, smashed_srv)
-                # --- boundary exchange #2: gradient -> client tier --------
-                g_h_back = jax.lax.ppermute(g_h, "model", down)
-                (g_wc,) = vjp_c(g_h_back)
-                wc = jax.tree.map(lambda p, g: p - lr * g, wc, g_wc)
-                ws = jax.tree.map(lambda p, g: p - lr * g, ws, g_ws)
-                return (wc, ws), loss
-
-            (wc, ws), _ = _steps_scan(step, (w_c, w_s),
-                                      jax.random.split(key_m, E),
-                                      unroll_steps)
-            return wc, ws
-
-        keys = jax.random.split(key, x.shape[0])
-        wc_new, ws_new = jax.vmap(per_client)(x, y, keys)
-        mean_local = lambda t: jax.tree.map(lambda a: jnp.mean(a, 0), t)
-        wc_new, ws_new = mean_local(wc_new), mean_local(ws_new)
-        scale = 1.0 / jax.lax.psum(1.0, axes)
-        wc_agg = jax.tree.map(lambda a: jax.lax.psum(a * scale, axes), wc_new)
-        ws_agg = jax.tree.map(lambda a: jax.lax.psum(a * scale, axes), ws_new)
-        return wc_agg, ws_agg
-
-    from jax.experimental.shard_map import shard_map
-    spec_clients = P(axes)
-    spec_rep = P()
-    return shard_map(local_round, mesh=mesh,
-                     in_specs=(spec_rep, spec_rep, spec_clients,
-                               spec_clients, spec_rep),
-                     out_specs=(spec_rep, spec_rep), check_rep=False)
 
 
 def make_distributed_inversion(cfg: DNNConfig, mesh: Mesh,

@@ -1,12 +1,24 @@
-"""Unified jitted federated round engine for the paper's four §V frameworks.
+"""Unified federated round engine for the paper's four §V frameworks —
+single-device, sharded (shard_map), and scanned execution from ONE round
+core.
 
-The seed implemented SplitMe, FedAvg, vanilla SFL and O-RANFed as separate
-classes, each with its own copy of the masked-vmapped local-training
-machinery.  This module owns that hot path once:
+A framework contributes only what actually differs, as a ``FrameworkSpec``:
+
+* one or more ``PhaseSpec``s — a pure per-batch ``local_step`` loss plus how
+  the phase's per-client inputs and targets derive from the round state
+  (SplitMe is two coupled phases: the server phase's targets are the smashed
+  activations of the client phase's *updated* per-client weights),
+* a ``comm_model`` — bits on the wire per round (Fig. 3b/4b input).  Comm
+  models are vectorized over a whole precomputed schedule: ``comm(a, E, sp)``
+  accepts a single round ((M,), int) or a stacked schedule ((R, M), (R,)),
+  so campaign metrics never do per-round host arithmetic,
+* a host-side selection/allocation ``Policy`` (Alg. 1 / P2 / fixed-K).
+
+The engine owns the hot path once, for every execution mode:
 
 * replication of the global parameters onto the vmapped client axis,
-* the jitted masked E_max-step local-SGD scan — E is a *traced* operand and
-  the scan length is static, so adaptive local-update counts (SplitMe's P2)
+* the masked E_max-step local-SGD scan — E is a *traced* operand and the
+  scan length is static, so adaptive local-update counts (SplitMe's P2)
   never trigger recompilation,
 * masked FedAvg aggregation over the selected set A_t,
 * per-phase loss metrics,
@@ -15,14 +27,20 @@ machinery.  This module owns that hot path once:
 * RNG pre-split once per round into per-phase × per-client keys before the
   vmapped scan (no per-step host splitting).
 
-A framework contributes only what actually differs, as a ``FrameworkSpec``:
+Execution modes over that core:
 
-* one or more ``PhaseSpec``s — a pure per-batch ``local_step`` loss plus how
-  the phase's per-client inputs and targets derive from the round state
-  (SplitMe is two coupled phases: the server phase's targets are the smashed
-  activations of the client phase's *updated* per-client weights),
-* a ``comm_model`` — bits on the wire per round (Fig. 3b/4b input),
-* a host-side selection/allocation ``Policy`` (Alg. 1 / P2 / fixed-K).
+* ``build_round_fn`` — single-device jitted round (optionally ``gather``
+  mode: train only a fixed-size selected cohort, numerically exact),
+* ``build_sharded_round_fn`` — the same round under ``shard_map`` with the
+  client axis sharded over the mesh ``data``/``pod`` axes.  Aggregation
+  becomes per-shard masked partial sums + one cross-client ``psum`` — the
+  paper's "one communication per round" as a real collective.  This is the
+  production pattern ``repro.core.distributed`` used to hand-write for
+  SplitMe only; that module is now a thin adapter over this builder,
+* ``build_eval_fn`` — jitted, vmap-able test-set evaluation (full-model
+  argmax accuracy, or SplitMe's Step-4 analytic inversion + stitched
+  forward), fused into the scanned campaign via a per-round ``do_eval``
+  mask so training never leaves the device between rounds.
 
 ``make_policy`` also prepares a private copy of the caller's
 ``SystemParams`` — the seed trainers mutated the shared instance in place,
@@ -31,13 +49,15 @@ to the caller's object.
 
 ``repro.core.splitme`` and ``repro.core.baselines`` are thin adapters over
 this engine; tests/test_engine_parity.py pins them to the seed trainers'
-exact numerics.  ``repro.launch.campaign`` batches many seeds through one
-compiled round function built here.
+exact numerics and pins the sharded round to the single-device round at
+1e-5.  ``repro.launch.campaign`` scans whole campaigns (all rounds, all
+seeds, fused eval) through compiled round functions built here, with one
+device→host metrics transfer per campaign.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -110,20 +130,41 @@ class FrameworkSpec:
 # The engine: build one jitted round function from a spec
 # ---------------------------------------------------------------------------
 
+def client_axes(mesh) -> Tuple[str, ...]:
+    """The mesh axes the client dimension shards over (shard_map rounds and
+    the Step-4 distributed inversion agree on this)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
 def replicate(params: Params, m: int) -> Params:
     """Broadcast global params onto the client axis (no copy until donated)."""
     return jax.tree.map(lambda p: jnp.broadcast_to(p, (m,) + p.shape), params)
 
 
-def masked_fedavg(stacked: Params, a_mask: jax.Array) -> Params:
-    """Masked FedAvg over the stacked client axis (eq. after Step 3)."""
-    wsum = jnp.maximum(jnp.sum(a_mask), 1.0)
-    return jax.tree.map(lambda p: jnp.tensordot(a_mask, p, axes=1) / wsum,
-                        stacked)
+def psum_bundle(tree, axis_names):
+    """psum a whole pytree as ONE all-reduce: ravel + concatenate the
+    leaves, cross the mesh once, split back.  ``jax.lax.psum`` on a pytree
+    emits one all-reduce per leaf and not every backend re-combines them;
+    bundling makes "one communication per round" a structural property of
+    the lowered HLO (fl_dryrun counts it).  Elementwise sums are unchanged,
+    so this is numerically exact."""
+    flat, treedef = jax.tree.flatten(tree)
+    sizes = [l.size for l in flat]
+    vec = jnp.concatenate([l.ravel() for l in flat]) if len(flat) > 1 \
+        else flat[0].ravel()
+    vec = jax.lax.psum(vec, axis_names)
+    parts = jnp.split(vec, list(np.cumsum(sizes[:-1])))
+    return jax.tree.unflatten(
+        treedef, [p.reshape(l.shape) for p, l in zip(parts, flat)])
 
 
-def _phase_runner(phase: PhaseSpec, n: int, batch_size: int, e_max: int):
-    """Per-client masked E_max-scan of SGD on the phase's local_step loss."""
+def _phase_runner(phase: PhaseSpec, n: int, batch_size: int, e_max: int,
+                  unroll: bool = False):
+    """Per-client masked E_max-scan of SGD on the phase's local_step loss.
+
+    ``unroll=True`` python-unrolls the step loop (the fl_dryrun collective
+    accounting needs unrolled bodies so any per-step collectives appear
+    E times in the lowered HLO)."""
     def run(w, data_m, target_m, e_steps, key_m):
         steps = jnp.arange(e_max)
 
@@ -137,7 +178,14 @@ def _phase_runner(phase: PhaseSpec, n: int, batch_size: int, e_max: int):
             w = jax.tree.map(lambda p, gg: p - phase.lr * do * gg, w, g)
             return (w, k), loss
 
-        (w, _), losses = jax.lax.scan(step, (w, key_m), steps)
+        if unroll:
+            carry, loss_l = (w, key_m), []
+            for i in range(e_max):
+                carry, l = step(carry, jnp.asarray(i))
+                loss_l.append(l)
+            w, losses = carry[0], jnp.stack(loss_l)
+        else:
+            (w, _), losses = jax.lax.scan(step, (w, key_m), steps)
         if phase.loss_over_mask:
             mask = (steps < e_steps).astype(jnp.float32)
             loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
@@ -146,6 +194,41 @@ def _phase_runner(phase: PhaseSpec, n: int, batch_size: int, e_max: int):
         return w, loss
 
     return run
+
+
+def _round_core(spec: FrameworkSpec, runners, params: ParamsTuple, ctx_c,
+                a_mask, e_steps, keys,
+                axis_names: Optional[Tuple[str, ...]] = None):
+    """One masked round over a client cohort (the full M axis, a gathered
+    cohort, or one device's shard — ``axis_names`` turns the aggregation
+    sums into cross-shard psums)."""
+    m = ctx_c["x"].shape[0]                 # (local) client-cohort axis
+    updated: Dict[int, Params] = {}
+    phase_losses = []
+    for pi, ph in enumerate(spec.phases):
+        tgt = ph.target_fn(params, updated, ctx_c)
+        w_rep = replicate(params[ph.param_idx], m)
+        w_new, loss_m = jax.vmap(runners[pi], in_axes=(0, 0, 0, None, 0))(
+            w_rep, ctx_c[ph.data_key], tgt, e_steps, keys[pi])
+        updated[ph.param_idx] = w_new
+        phase_losses.append(loss_m)
+    # Masked-FedAvg numerators, the |A_t| count and the loss sums all cross
+    # the mesh in ONE fused psum — the paper's "one communication per round"
+    # is literally one all-reduce in the lowered HLO (fl_dryrun pins this).
+    weighted = {i: jax.tree.map(lambda p: jnp.tensordot(a_mask, p, axes=1), u)
+                for i, u in updated.items()}
+    msum = jnp.sum(a_mask)
+    loss_sums = tuple(jnp.sum(l * a_mask) for l in phase_losses)
+    if axis_names is not None:
+        weighted, msum, loss_sums = psum_bundle(
+            (weighted, msum, loss_sums), axis_names)
+    wsum = jnp.maximum(msum, 1.0)
+    new_params = tuple(
+        jax.tree.map(lambda p: p / wsum, weighted[i]) if i in weighted
+        else params[i]
+        for i in range(len(params)))
+    losses = tuple(s / wsum for s in loss_sums)
+    return new_params, losses
 
 
 def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
@@ -179,24 +262,6 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
                for ph in spec.phases]
     n_ph = len(spec.phases)
 
-    def _round_core(params: ParamsTuple, ctx_c, a_mask, e_steps, keys):
-        m = ctx_c["x"].shape[0]                 # client-cohort axis length
-        updated: Dict[int, Params] = {}
-        phase_losses = []
-        for pi, ph in enumerate(spec.phases):
-            tgt = ph.target_fn(params, updated, ctx_c)
-            w_rep = replicate(params[ph.param_idx], m)
-            w_new, loss_m = jax.vmap(runners[pi], in_axes=(0, 0, 0, None, 0))(
-                w_rep, ctx_c[ph.data_key], tgt, e_steps, keys[pi])
-            updated[ph.param_idx] = w_new
-            phase_losses.append(loss_m)
-        wsum = jnp.maximum(jnp.sum(a_mask), 1.0)
-        new_params = tuple(
-            masked_fedavg(updated[i], a_mask) if i in updated else params[i]
-            for i in range(len(params)))
-        losses = tuple(jnp.sum(l * a_mask) / wsum for l in phase_losses)
-        return new_params, losses
-
     if gather:
         def round_fn(params: ParamsTuple, sel_idx, sel_mask, e_steps, key):
             # full per-client key split, gathered: stream m is the same
@@ -204,11 +269,73 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
             keys = jax.random.split(key, n_ph * M).reshape(
                 n_ph, M, -1)[:, sel_idx]
             ctx_c = {k: v[sel_idx] for k, v in ctx.items()}
-            return _round_core(params, ctx_c, sel_mask, e_steps, keys)
+            return _round_core(spec, runners, params, ctx_c, sel_mask,
+                               e_steps, keys)
     else:
         def round_fn(params: ParamsTuple, a_mask, e_steps, key):
             keys = jax.random.split(key, n_ph * M).reshape(n_ph, M, -1)
-            return _round_core(params, ctx, a_mask, e_steps, keys)
+            return _round_core(spec, runners, params, ctx, a_mask, e_steps,
+                               keys)
+
+    if not jit:
+        return round_fn
+    return jax.jit(round_fn, donate_argnums=(0,) if donate else ())
+
+
+def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
+                           n_clients: int, e_max: int, donate: bool = True,
+                           jit: bool = True, unroll_steps: bool = False):
+    """Compile one federated round for `spec` with the CLIENT AXIS SHARDED
+    over the mesh ``data``/``pod`` axes via ``shard_map``.
+
+    Returns ``round_fn(params_tuple, x, y, a_mask, e_steps, key) ->
+    (params_tuple, per_phase_losses)``.  Unlike ``build_round_fn`` the
+    client dataset is an argument (shard it once with
+    ``NamedSharding(mesh, P(client_axes(mesh)))`` and every round reuses the
+    placement).  Each device trains only its M/|shards| client slab; the
+    ONLY cross-device communication is the masked-FedAvg ``psum`` of the
+    per-shard (weighted params, mask count, losses) partial sums — the
+    paper's "one communication per round" as a real collective, exactly the
+    pattern ``core/distributed.py`` used to hand-write for SplitMe.
+
+    The RNG is the full ``n_phases × M`` per-client split computed from the
+    round key *before* shard_map, sharded alongside the data, so every
+    client sees the identical stream as the single-device round: results
+    match ``build_round_fn`` to fp-reassociation error (pinned at 1e-5 by
+    tests/test_engine_parity.py, including a multi-device CPU case).
+
+    ``unroll_steps`` python-unrolls the local-SGD loop for the fl_dryrun
+    collective accounting (per-step collectives — none for the engine's
+    frameworks — would appear E times in the lowered HLO).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = client_axes(mesh)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    M = n_clients
+    if M % n_shards:
+        raise ValueError(f"n_clients={M} not divisible by the "
+                         f"{n_shards} client shards of mesh axes {axes}")
+    n_ph = len(spec.phases)
+
+    def local_round(params, x_s, y_s, a_s, e_steps, keys_s):
+        n = x_s.shape[1]
+        runners = [_phase_runner(ph, n, spec.batch_size, e_max, unroll_steps)
+                   for ph in spec.phases]
+        ctx_c = {"x": x_s, "y": y_s, "y1": jax.nn.one_hot(y_s, cfg.n_classes)}
+        return _round_core(spec, runners, params, ctx_c, a_s, e_steps,
+                           keys_s, axis_names=axes)
+
+    c_spec = P(axes)
+    sharded = shard_map(
+        local_round, mesh=mesh,
+        in_specs=(P(), c_spec, c_spec, c_spec, P(), P(None, axes)),
+        out_specs=(P(), P()), check_rep=False)
+
+    def round_fn(params: ParamsTuple, x, y, a_mask, e_steps, key):
+        keys = jax.random.split(key, n_ph * M).reshape(n_ph, M, -1)
+        return sharded(params, x, y, a_mask, e_steps, keys)
 
     if not jit:
         return round_fn
@@ -340,10 +467,17 @@ def _mlp_spec(name: str, cfg: DNNConfig, comm_model, *, lr: float,
         init_key_offset=1)
 
 
+def _as_float(x: np.ndarray):
+    """Scalar float for a single round, ndarray for a stacked schedule."""
+    x = np.asarray(x, np.float64)
+    return float(x) if x.ndim == 0 else x
+
+
 def _make_fedavg(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
                  **_) -> FrameworkSpec:
     def comm(a, E, sp):
-        return float(np.sum(a) * sp.d_model_bits)
+        # a: (M,) or a stacked-schedule (R, M); E: int or (R,)
+        return _as_float(np.sum(a, axis=-1) * sp.d_model_bits)
     return _mlp_spec("fedavg", cfg, comm, lr=lr, batch_size=batch_size)
 
 
@@ -353,15 +487,16 @@ def _make_sfl(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
     boundary_bits = 2 * batch_size * dnn.client_dims(cfg)[-1] * 32.0
 
     def comm(a, E, sp):
-        return float(np.sum(a) * (E * boundary_bits
-                                  + sp.omega * sp.d_model_bits))
+        return _as_float(np.sum(a, axis=-1)
+                         * (np.asarray(E, np.float64) * boundary_bits
+                            + sp.omega * sp.d_model_bits))
     return _mlp_spec("sfl", cfg, comm, lr=lr, batch_size=batch_size)
 
 
 def _make_oranfed(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
                   **_) -> FrameworkSpec:
     def comm(a, E, sp):
-        return float(np.sum(a) * sp.d_model_bits)
+        return _as_float(np.sum(a, axis=-1) * sp.d_model_bits)
     return _mlp_spec("oranfed", cfg, comm, lr=lr, batch_size=batch_size)
 
 
@@ -402,7 +537,8 @@ def _make_splitme(cfg: DNNConfig, *, lr_c: float = 0.05, lr_s: float = 0.02,
         return (dnn.init_client(k1, cfg), dnn.init_inverse_server(k2, cfg))
 
     def comm(a, E, sp):
-        return float(np.sum(a * (sp.S_m + sp.omega * sp.d_model_bits)))
+        return _as_float(np.sum(a * (sp.S_m + sp.omega * sp.d_model_bits),
+                                axis=-1))
 
     return FrameworkSpec(
         name="splitme", init_fn=init,
@@ -434,3 +570,50 @@ def make_spec(name: str, cfg: DNNConfig, **hyper) -> FrameworkSpec:
         raise KeyError(
             f"unknown framework {name!r}; have {framework_names()}") from None
     return factory(cfg, **hyper)
+
+
+# ---------------------------------------------------------------------------
+# Jitted test-set evaluation (vmap-able; fused into the scanned campaign)
+# ---------------------------------------------------------------------------
+
+def build_eval_fn(spec: FrameworkSpec, cfg: DNNConfig, x_test, y_test, *,
+                  client_data: Optional[Dict[str, Any]] = None,
+                  gamma: float = 1e-3, jit: bool = True):
+    """Build ``accuracy(params_tuple) -> scalar`` for `spec`.
+
+    Full-model frameworks evaluate the aggregated MLP directly.  SplitMe
+    first recovers the server model via the one-shot analytic inversion
+    (Step 4), which needs `client_data` for the Gram sums.  The function is
+    pure (jit/vmap/cond-safe), so trainers call it jitted, the campaign
+    runner vmaps it over the seed axis, and the scanned campaign embeds it
+    behind a per-round ``do_eval`` mask without leaving the device.
+    """
+    x_test = jnp.asarray(x_test)
+    y_test = jnp.asarray(y_test)
+    if spec.name == "splitme":
+        if client_data is None:
+            raise ValueError("splitme evaluation needs client_data for the "
+                             "Step-4 Gram sums")
+        from repro.core.inversion import invert_inverse_model
+        x = jnp.asarray(client_data["x"])
+        y1 = jax.nn.one_hot(jnp.asarray(client_data["y"]), cfg.n_classes)
+        flat_y = y1.reshape(-1, cfg.n_classes)
+
+        def accuracy(params: ParamsTuple) -> jax.Array:
+            w_c, w_s_inv = params
+            smashed = jax.vmap(
+                lambda xm: dnn.client_forward(w_c, xm, cfg))(x)
+            w_s = invert_inverse_model(
+                w_s_inv, smashed.reshape(-1, smashed.shape[-1]), flat_y, cfg,
+                gamma=gamma)
+            logits = dnn.full_forward(w_c, w_s, x_test, cfg)
+            return jnp.mean((jnp.argmax(logits, -1) == y_test)
+                            .astype(jnp.float32))
+    else:
+        def accuracy(params: ParamsTuple) -> jax.Array:
+            (w,) = params
+            logits = dnn.mlp_forward(w, x_test, cfg.activation)
+            return jnp.mean((jnp.argmax(logits, -1) == y_test)
+                            .astype(jnp.float32))
+
+    return jax.jit(accuracy) if jit else accuracy

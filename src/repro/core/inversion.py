@@ -69,8 +69,10 @@ def invert_inverse_model(inverse_params: List[dict],
         o_aug = _augment(o)
         a0, a1 = _gram(o_aug, z, use_kernel)
         if axis_name is not None:
-            a0 = jax.lax.psum(a0, axis_name)
-            a1 = jax.lax.psum(a1, axis_name)
+            # one fused all-reduce per layer: both Gram sums cross the mesh
+            # in a single concatenated payload (exact — elementwise sums)
+            both = jax.lax.psum(jnp.concatenate([a0, a1], axis=1), axis_name)
+            a0, a1 = both[:, :a0.shape[1]], both[:, a0.shape[1]:]
         d = a0.shape[0]
         w_aug = jnp.linalg.solve(a0 + gamma * jnp.eye(d, dtype=a0.dtype), a1)
         w, b = w_aug[:-1], w_aug[-1]

@@ -64,6 +64,11 @@ class SplitMeTrainer:
         self._round = 0
         self._round_fn = engine.build_round_fn(
             self._spec, cfg, self.x, self.y, e_max=self.sp.E_max)
+        # jitted Step-4-inversion + stitched-forward accuracy (one compile,
+        # reused on every eval round instead of an eager per-call inversion)
+        self._eval_fn = engine.build_eval_fn(
+            self._spec, cfg, self.x_test, self.y_test,
+            client_data={"x": self.x, "y": self.y}, gamma=gamma)
 
     # ------------------------------------------------------------------
     def _jit_round(self, w_c, w_s_inv, a_mask, e_steps, key):
@@ -113,6 +118,8 @@ class SplitMeTrainer:
                                     gamma=self.gamma, use_kernel=use_kernel)
 
     def evaluate(self, w_server: Optional[List[dict]] = None) -> float:
-        w_s = self.finalize() if w_server is None else w_server
-        logits = dnn.full_forward(self.w_c, w_s, self.x_test, self.cfg)
-        return float(jnp.mean(jnp.argmax(logits, -1) == self.y_test))
+        if w_server is not None:
+            logits = dnn.full_forward(self.w_c, w_server, self.x_test,
+                                      self.cfg)
+            return float(jnp.mean(jnp.argmax(logits, -1) == self.y_test))
+        return float(self._eval_fn((self.w_c, self.w_s_inv)))

@@ -1,28 +1,50 @@
-"""Vmapped multi-seed / multi-config campaign runner.
+"""Scanned, vmapped multi-seed / multi-config campaign runner.
 
 Batches many independent training runs — different model-init / batching
 RNG seeds over the same data — through shared compiled round functions,
-``vmap``-ed over the seed axis.
+``vmap``-ed over the seed axis, and runs ALL ROUNDS of a campaign as
+``lax.scan``s on the device: per-round losses and fused-eval accuracies
+land in device-resident metric buffers that transfer to host ONCE per
+campaign (``_host_fetch``), never once per round, while the
+schedule-derived metrics (comm_bits, selected-count, latency, cost) are
+vectorized over the whole precomputed schedule up front — so no per-round
+host arithmetic ever depends on a device pull.
 
 This works because the system-side trajectory (A_t, b_t, E_t) of every §V
 framework is independent of the learned parameters — Alg. 1 / P2 depend
 only on SystemParams and realized comm times — so it is precomputed
 host-side once (`plan_schedule`) and shared by all seeds, exactly matching
 what each serial trainer would have done.  Knowing the schedule up front
-buys two exact optimizations the serial trainers cannot apply (a varying
-cohort would recompile every round): each round gathers only its selected
-client cohort (engine ``gather`` mode) and scans exactly E_t local steps,
-skipping unselected clients and the frozen scan tail entirely.  Rounds
-sharing a (cohort-bucket, E) shape share one compiled vmapped round.
-Trained parameters are numerically identical to serial engine-trainer runs
-(tests/test_campaign.py).
+buys exact optimizations the serial trainers cannot apply (a varying cohort
+would recompile every round): each round gathers only its selected client
+cohort (engine ``gather`` mode) and scans exactly E_t local steps, skipping
+unselected clients and the frozen scan tail entirely; the precomputed
+A_t/b_t/E_t arrays become scan operands; and evaluation is fused into the
+scanned round behind a per-round ``do_eval`` mask (``lax.cond``), so
+training never leaves the device between rounds.  Rounds sharing a
+(cohort-bucket, E-bucket) shape form contiguous scan segments that share
+one compiled scan (segment lengths are bucketed too; padded rounds carry a
+``live=0`` flag and are exact no-ops).  Trained parameters are numerically
+identical to serial engine-trainer runs (tests/test_campaign.py).
 
-Multi-config campaigns: run one campaign per SystemParams variant
-(`run_config_sweep`); each variant gets its own schedule but reuses the
-framework spec, and all seeds within a variant are vmapped.
+Execution modes:
+
+* ``scan=True`` (default) — the scanned campaign described above.
+* ``scan=False`` — the legacy per-round python loop (one dispatch and,
+  eventually, one host transfer per round); kept as the benchmark baseline.
+* ``mesh=...`` — rounds run through ``engine.build_sharded_round_fn``:
+  clients shard over the mesh ``data``/``pod`` axes and the masked-FedAvg
+  psum is the round's only collective, while seeds stay vmapped and rounds
+  stay scanned (scan-over-shard_map-over-vmap).
+
+Multi-config campaigns: ``run_config_sweep`` vmaps over SystemParams
+variants sharing one (rounds, M) schedule shape — one compiled scan trains
+every (variant, seed) pair and the whole sweep performs a single host
+transfer.
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -31,10 +53,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import dnn, engine
+from repro.core import engine
 from repro.core.cost import SystemParams, round_cost, total_time
 from repro.core.engine import RoundMetrics
-from repro.core.inversion import invert_inverse_model
+
+# Device→host transfer accounting: every metrics pull in this module goes
+# through _host_fetch, so tests/benchmarks can count transfers per campaign
+# (scanned: exactly 1; python loop: 1 per round).
+HOST_TRANSFERS = 0
+
+
+def _host_fetch(tree):
+    """The single device→host transfer point for campaign metrics."""
+    global HOST_TRANSFERS
+    HOST_TRANSFERS += 1
+    return jax.device_get(tree)
 
 
 @dataclass
@@ -58,6 +91,8 @@ class CampaignResult:
     losses: np.ndarray        # (n_seeds, rounds, n_phases)
     metrics: List[RoundMetrics]   # system metrics per round (seed-invariant)
     accuracy: Optional[np.ndarray] = None   # (n_seeds,) if test_data given
+    accuracy_per_round: Optional[np.ndarray] = None  # (rounds, n_seeds), NaN
+    # off eval rounds (scan mode with test_data / eval_every)
 
     def params_for(self, i: int):
         """The i-th seed's params tuple (unstacked)."""
@@ -85,7 +120,8 @@ def plan_schedule(framework: str, sp: SystemParams, cfg: DNNConfig,
 
 
 def _bucket_cohorts(values, cap: int, max_exact: int = 8) -> Dict[int, int]:
-    """Map each schedule value (cohort size or E) to a compile-shape bucket.
+    """Map each schedule value (cohort size, E, or scan-segment length) to a
+    compile-shape bucket.
 
     Few distinct values → exact shapes (one compile each); many → round up
     to powers of two (bounds the number of compilations at log2(cap))."""
@@ -100,11 +136,57 @@ def _bucket_cohorts(values, cap: int, max_exact: int = 8) -> Dict[int, int]:
     return {k: next(x for x in buckets if x >= k) for k in distinct}
 
 
+def _schedule_system_metrics(spec, sched: RoundSchedule, sp: SystemParams):
+    """All schedule-derived metrics for every round in one vectorized pass —
+    comm_bits via the spec's stacked-schedule comm_model — so no per-round
+    host arithmetic (and nothing here) ever depends on a device pull."""
+    comm = np.atleast_1d(np.asarray(
+        spec.comm_model(sched.a, sched.E, sp), np.float64))
+    nsel = sched.a.sum(axis=1).astype(int)
+    sim = np.array([total_time(sched.a[r], sched.b[r], int(sched.E[r]), sp)
+                    for r in range(sched.rounds)])
+    cost = np.array([round_cost(sched.a[r], sched.b[r], int(sched.E[r]), sp)
+                     for r in range(sched.rounds)])
+    return comm, nsel, sim, cost
+
+
+def _plan_segments(kb_r: Sequence[int], eb_r: Sequence[int]
+                   ) -> List[Tuple[int, int, int, int]]:
+    """Contiguous maximal runs of rounds sharing a (cohort, E) shape bucket:
+    [(kb, eb, start, length)] in round order."""
+    segs, start = [], 0
+    R = len(kb_r)
+    for r in range(1, R + 1):
+        if r == R or (kb_r[r], eb_r[r]) != (kb_r[start], eb_r[start]):
+            segs.append((kb_r[start], eb_r[start], start, r - start))
+            start = r
+    return segs
+
+
+def _make_metrics(sched, comm, nsel, sim, cost, losses, acc_rounds
+                  ) -> List[RoundMetrics]:
+    metrics = []
+    for r in range(sched.rounds):
+        acc_r = float("nan")
+        if acc_rounds is not None and np.isfinite(acc_rounds[r]).any():
+            acc_r = float(np.nanmean(acc_rounds[r]))
+        metrics.append(RoundMetrics(
+            round=r, n_selected=int(nsel[r]), E=int(sched.E[r]),
+            comm_bits=float(comm[r]), sim_time=float(sim[r]),
+            cost=float(cost[r]), accuracy=acc_r,
+            client_loss=float(losses[:, r, 0].mean()),
+            server_loss=float(losses[:, r, 1].mean())
+            if losses.shape[-1] > 1 else float("nan")))
+    return metrics
+
+
 def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
                  client_data: Dict[str, np.ndarray], *, rounds: int,
                  seeds: Sequence[int], test_data=None,
                  K: int = 10, E: int = 10, e_initial: int = 20,
-                 policy_seed: Optional[int] = None,
+                 policy_seed: Optional[int] = None, scan: bool = True,
+                 mesh=None, eval_every: Optional[int] = None,
+                 eval_gamma: float = 1e-3, strict_transfers: bool = False,
                  **hyper) -> CampaignResult:
     """Train `len(seeds)` independent runs of `framework` in one compiled
     scan-over-rounds, vmapped over the seed axis.
@@ -117,6 +199,16 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
     drawn from ``policy_seed`` (default: min(seeds)).  ``hyper`` forwards
     to the framework spec factory (lr / lr_c / lr_s / temperature /
     batch_size).
+
+    ``scan=True`` runs the whole campaign on-device (see module docstring):
+    one host transfer for all per-round metrics, evaluation fused behind a
+    ``do_eval`` mask on the final round (plus every ``eval_every`` rounds).
+    ``scan=False`` is the legacy per-round python loop.  ``mesh`` switches
+    the round bodies to the shard_map engine round (clients sharded over
+    the mesh data axes).  ``strict_transfers=True`` wraps the device phase
+    in ``jax.transfer_guard_device_to_host("disallow")``, turning any
+    stray per-round pull into a hard error (used by the transfer-counting
+    test).
     """
     x = jnp.asarray(client_data["x"])
     y = jnp.asarray(client_data["y"])
@@ -137,16 +229,70 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
     # only SplitMe's *loss metric* differs from the seed quirk of averaging
     # over the full E_max scan.
     spec = engine.make_spec(framework, cfg, masked_loss_metric=True, **hyper)
+    comm, nsel, sim, cost = _schedule_system_metrics(spec, sched, sp)
 
-    # Knowing the whole schedule, each round trains only its selected
-    # cohort (gathered, padded to a shape bucket) for exactly E_t steps —
-    # numerically exact vs the full masked round, but skipping the
-    # unselected clients and the frozen scan tail entirely.  Rounds sharing
-    # a (cohort-bucket, E) shape share one compiled vmapped round.
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        csh = NamedSharding(mesh, P(engine.client_axes(mesh)))
+        x, y = jax.device_put(x, csh), jax.device_put(y, csh)
+
+    if not scan:
+        if mesh is not None:
+            raise ValueError("mesh (sharded rounds) requires scan=True")
+        if eval_every:
+            raise ValueError("eval_every (fused per-round eval) requires "
+                             "scan=True; the python loop only evaluates "
+                             "post-hoc")
+        losses, params = _run_rounds_loop(spec, cfg, sp, sched, x, y, seeds)
+        result = CampaignResult(
+            framework=framework, seeds=tuple(seeds), schedule=sched,
+            params=params, losses=losses,
+            metrics=_make_metrics(sched, comm, nsel, sim, cost, losses,
+                                  None))
+        if test_data is not None:
+            result.accuracy = evaluate_campaign(
+                result, cfg, test_data, client_data=client_data,
+                gamma=eval_gamma)
+        return result
+
+    eval_fn = None
+    do_eval = np.zeros(rounds, np.float32)
+    if test_data is not None:
+        eval_fn = engine.build_eval_fn(
+            spec, cfg, *test_data, gamma=eval_gamma, jit=False,
+            client_data={"x": x, "y": y} if framework == "splitme" else None)
+        if eval_every:
+            do_eval[eval_every - 1::eval_every] = 1.0
+        do_eval[rounds - 1] = 1.0
+
+    guard = (jax.transfer_guard_device_to_host("disallow")
+             if strict_transfers else contextlib.nullcontext())
+    with guard:
+        params, buffers = _run_rounds_scan(
+            spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn, mesh)
+    host = _host_fetch(buffers)            # THE per-campaign transfer
+
+    live = host["live"] > 0
+    losses = np.transpose(host["loss"][live], (1, 0, 2))   # (S, R, n_ph)
+    acc_rounds = np.asarray(host["acc"][live])             # (R, S)
+    result = CampaignResult(
+        framework=framework, seeds=tuple(seeds), schedule=sched,
+        params=params, losses=losses,
+        metrics=_make_metrics(sched, comm, nsel, sim, cost, losses,
+                              acc_rounds if test_data is not None else None),
+        accuracy_per_round=acc_rounds if test_data is not None else None)
+    if test_data is not None:
+        result.accuracy = acc_rounds[rounds - 1]
+    return result
+
+
+def _run_rounds_loop(spec, cfg, sp, sched, x, y, seeds):
+    """Legacy per-round python loop (the PR-1 hot path, kept as benchmark
+    baseline): one dispatch per round, one host transfer per round when the
+    loss rows are pulled."""
+    rounds = sched.rounds
     counts = sched.a.sum(axis=1).astype(int)
     size_of = _bucket_cohorts(counts, sp.M)
-    # E is bucketed like cohort sizes (scan e_bucket steps, mask the tail —
-    # exact) so adaptive-E frameworks compile at most max_exact/log2 rounds
     e_of = _bucket_cohorts(sched.E, int(sp.E_max))
     fns: Dict[Tuple[int, int], Any] = {}
 
@@ -180,68 +326,264 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
             subs)
         loss_rows.append(loss_r)
 
-    losses = np.stack([np.stack([np.asarray(l) for l in row], axis=-1)
-                       for row in loss_rows], axis=1)  # (S, R, n_phases)
-    metrics = []
-    for r in range(rounds):
-        a, b, e = sched.a[r], sched.b[r], int(sched.E[r])
-        metrics.append(RoundMetrics(
-            round=r, n_selected=int(a.sum()), E=e,
-            comm_bits=spec.comm_model(a, e, sp),
-            sim_time=total_time(a, b, e, sp),
-            cost=round_cost(a, b, e, sp),
-            client_loss=float(losses[:, r, 0].mean()),
-            server_loss=float(losses[:, r, 1].mean())
-            if losses.shape[-1] > 1 else float("nan")))
-    result = CampaignResult(framework=framework, seeds=tuple(seeds),
-                            schedule=sched, params=params, losses=losses,
-                            metrics=metrics)
-    if test_data is not None:
-        result.accuracy = evaluate_campaign(result, cfg, test_data,
-                                            client_data=client_data)
-    return result
+    losses = np.stack(
+        [np.stack(_host_fetch(row), axis=-1) for row in loss_rows],
+        axis=1)                                   # (S, R, n_phases)
+    return losses, params
+
+
+def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
+                     mesh):
+    """Scan all rounds on-device; returns (params, device metric buffers).
+
+    The buffers carry everything that EXISTS on the device — per-round
+    per-seed losses and fused-eval accuracies (plus the live mask); the
+    remaining per-round metrics (comm_bits, selected-count, latency, cost)
+    are schedule constants already precomputed host-side by
+    ``_schedule_system_metrics`` and never touch the device.
+
+    Rounds sharing a (cohort-bucket, E-bucket) shape form contiguous scan
+    segments; segment lengths are bucketed as well, padded with ``live=0``
+    no-op rounds, so the number of compiled scans is bounded even for
+    adaptive-E / varying-cohort schedules."""
+    rounds = sched.rounds
+    n_seeds = len(seeds)
+    counts = sched.a.sum(axis=1).astype(int)
+    e_of = _bucket_cohorts(sched.E, int(sp.E_max))
+    if mesh is None:
+        size_of = _bucket_cohorts(counts, sp.M)
+        kb_r = [size_of[int(c)] for c in counts]
+    else:
+        kb_r = [int(sp.M)] * rounds       # sharded rounds train the full
+        # masked M axis (a gather would break the static client sharding)
+    eb_r = [e_of[int(e)] for e in sched.E]
+    segs = _plan_segments(kb_r, eb_r)
+    len_of = _bucket_cohorts([l for *_ , l in segs],
+                             max(l for *_, l in segs))
+
+    n_ph = len(spec.phases)
+    fns: Dict[Tuple[int, int, int], Any] = {}
+
+    def seg_exec(kb: int, eb: int, lb: int):
+        if (kb, eb, lb) in fns:
+            return fns[kb, eb, lb]
+        if mesh is None:
+            raw = engine.build_round_fn(spec, cfg, x, y, e_max=max(1, eb),
+                                        jit=False, gather=True)
+
+            def call_round(params, xr, subs):
+                return jax.vmap(raw, in_axes=(0, None, None, None, 0))(
+                    params, xr["idx"], xr["mask"], xr["e"], subs)
+        else:
+            raw = engine.build_sharded_round_fn(
+                spec, cfg, mesh, n_clients=int(sp.M), e_max=max(1, eb),
+                jit=False)
+
+            def call_round(params, xr, subs):
+                return jax.vmap(raw, in_axes=(0, None, None, None, None, 0))(
+                    params, x, y, xr["mask"], xr["e"], subs)
+
+        nan_row = jnp.full((n_seeds,), jnp.nan, jnp.float32)
+
+        def body(carry, xr):
+            params, keys = carry
+            ks = jax.vmap(jax.random.split)(keys)
+            nkeys, subs = ks[:, 0], ks[:, 1]
+            nparams, phase_losses = call_round(params, xr, subs)
+            live = xr["live"] > 0
+            params = jax.tree.map(lambda n, o: jnp.where(live, n, o),
+                                  nparams, params)
+            keys = jnp.where(live, nkeys, keys)
+            loss_row = jnp.where(live, jnp.stack(phase_losses, -1), jnp.nan)
+            if eval_fn is None:
+                acc = nan_row
+            else:
+                acc = jax.lax.cond(
+                    jnp.logical_and(xr["do_eval"] > 0, live),
+                    jax.vmap(eval_fn), lambda p: nan_row, params)
+            return (params, keys), {"loss": loss_row, "acc": acc,
+                                    "live": xr["live"]}
+
+        def seg(params, key_arr, xs):
+            return jax.lax.scan(body, (params, key_arr), xs)
+
+        fns[kb, eb, lb] = jax.jit(seg, donate_argnums=(0, 1))
+        return fns[kb, eb, lb]
+
+    init_keys = jnp.stack([jax.random.PRNGKey(s + spec.init_key_offset)
+                           for s in seeds])
+    key_arr = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    params = jax.vmap(spec.init_fn)(init_keys)
+    ys_all = []
+    for kb, eb, start, length in segs:
+        lb = len_of[length]
+        xs = {
+            "e": np.zeros(lb, np.int32),
+            "live": np.zeros(lb, np.float32),
+            "do_eval": np.zeros(lb, np.float32),
+        }
+        xs["e"][:length] = sched.E[start:start + length]
+        xs["live"][:length] = 1.0
+        xs["do_eval"][:length] = do_eval[start:start + length]
+        if mesh is None:
+            idx = np.zeros((lb, kb), np.int32)
+            mask = np.zeros((lb, kb), np.float32)
+            for i, r in enumerate(range(start, start + length)):
+                k_r = int(counts[r])
+                idx[i, :k_r] = np.nonzero(sched.a[r])[0]  # pads: client 0,
+                mask[i, :k_r] = 1.0                       # mask weight 0
+            xs["idx"], xs["mask"] = idx, mask
+        else:
+            mask = np.zeros((lb, int(sp.M)), np.float32)
+            mask[:length] = sched.a[start:start + length]
+            xs["mask"] = mask
+        (params, key_arr), ys = seg_exec(kb, eb, lb)(params, key_arr, xs)
+        ys_all.append(ys)
+
+    buffers = {k: (jnp.concatenate([ys[k] for ys in ys_all], axis=0)
+                   if len(ys_all) > 1 else ys_all[0][k])
+               for k in ys_all[0]}
+    return params, buffers
 
 
 def evaluate_campaign(result: CampaignResult, cfg: DNNConfig, test_data,
                       client_data=None, gamma: float = 1e-3) -> np.ndarray:
-    """Per-seed test accuracy of a finished campaign.
+    """Per-seed test accuracy of a finished campaign (post-hoc; the scanned
+    campaign fuses the same jitted evaluation into its round scan).
 
-    Full-model frameworks evaluate the aggregated MLP directly (vmapped over
-    the seed axis).  SplitMe first recovers each seed's server model via the
-    one-shot analytic inversion (Step 4), which needs the client data for
-    the Gram sums.
-    """
-    x_test, y_test = map(jnp.asarray, test_data)
-    if result.framework != "splitme":
-        (params,) = (result.params if isinstance(result.params, tuple)
-                     else (result.params,))
-        logits = jax.vmap(
-            lambda w: dnn.mlp_forward(w, x_test, cfg.activation))(params)
-        return np.asarray(
-            jnp.mean(jnp.argmax(logits, -1) == y_test[None, :], axis=-1),
-            dtype=np.float64)
-    if client_data is None:
+    Full-model frameworks evaluate the aggregated MLP directly; SplitMe
+    first recovers each seed's server model via the one-shot analytic
+    inversion (Step 4), which needs the client data for the Gram sums.
+    Both paths are the engine's jitted ``build_eval_fn``, vmapped over the
+    seed axis."""
+    spec = engine.make_spec(result.framework, cfg)
+    if result.framework == "splitme" and client_data is None:
         raise ValueError("splitme evaluation needs client_data for Step 4")
-    x = jnp.asarray(client_data["x"])
-    y1 = jax.nn.one_hot(jnp.asarray(client_data["y"]), cfg.n_classes)
-    accs = []
-    for i in range(len(result.seeds)):
-        w_c, w_s_inv = result.params_for(i)
-        smashed = jax.vmap(lambda xm: dnn.client_forward(w_c, xm, cfg))(x)
-        w_s = invert_inverse_model(
-            w_s_inv, smashed.reshape(-1, smashed.shape[-1]),
-            y1.reshape(-1, cfg.n_classes), cfg, gamma=gamma)
-        logits = dnn.full_forward(w_c, w_s, x_test, cfg)
-        accs.append(float(jnp.mean(jnp.argmax(logits, -1) == y_test)))
-    return np.asarray(accs)
+    eval_fn = engine.build_eval_fn(
+        spec, cfg, *test_data, gamma=gamma, jit=False,
+        client_data=client_data if result.framework == "splitme" else None)
+    acc = _host_fetch(jax.jit(jax.vmap(eval_fn))(result.params))
+    return np.asarray(acc, dtype=np.float64)
 
 
 def run_config_sweep(framework: str, cfg: DNNConfig,
                      system_params: Sequence[SystemParams],
                      client_data, *, rounds: int, seeds: Sequence[int],
-                     test_data=None, **kw) -> List[CampaignResult]:
-    """Multi-config campaign: one vmapped multi-seed campaign per
-    SystemParams variant (each variant has its own A_t/b_t/E_t schedule)."""
-    return [run_campaign(framework, cfg, sp, client_data, rounds=rounds,
-                         seeds=seeds, test_data=test_data, **kw)
-            for sp in system_params]
+                     test_data=None, vmap_configs: bool = True,
+                     K: int = 10, E: int = 10, e_initial: int = 20,
+                     policy_seed: Optional[int] = None,
+                     eval_gamma: float = 1e-3,
+                     eval_every: Optional[int] = None, mesh=None,
+                     strict_transfers: bool = False,
+                     **hyper) -> List[CampaignResult]:
+    """Multi-config campaign over SystemParams variants.
+
+    With ``vmap_configs=True`` (default) every variant's schedule shares
+    one (rounds, M) shape, so ALL (variant, seed) pairs train through one
+    compiled scan-over-rounds: full-M masked rounds (exact — masked updates
+    are no-ops), E_max = the sweep-wide maximum, schedules stacked as scan
+    operands, evaluation fused behind the ``do_eval`` mask (final round +
+    every ``eval_every`` rounds), and a single host transfer for the entire
+    sweep.  Set ``vmap_configs=False`` for the serial per-variant loop (one
+    scanned campaign each); ``mesh`` (sharded rounds) is only available on
+    that path — per-variant masks can't share one static client sharding."""
+    if not vmap_configs:
+        return [run_campaign(framework, cfg, sp, client_data, rounds=rounds,
+                             seeds=seeds, test_data=test_data, K=K, E=E,
+                             e_initial=e_initial, policy_seed=policy_seed,
+                             eval_gamma=eval_gamma, eval_every=eval_every,
+                             mesh=mesh, strict_transfers=strict_transfers,
+                             **hyper)
+                for sp in system_params]
+    if mesh is not None:
+        raise ValueError("mesh (sharded rounds) requires vmap_configs=False")
+
+    x = jnp.asarray(client_data["x"])
+    y = jnp.asarray(client_data["y"])
+    n_m = int(x.shape[1])
+    if policy_seed is None:
+        policy_seed = min(seeds)
+    planned = [plan_schedule(framework, sp, cfg, rounds, K=K, E=E,
+                             e_initial=e_initial, policy_seed=policy_seed,
+                             n_samples_per_client=n_m)
+               for sp in system_params]
+    for sp_d, _ in planned:
+        if sp_d.M != x.shape[0]:
+            raise ValueError(f"all SystemParams variants must have "
+                             f"M={x.shape[0]} to share one schedule shape")
+    sps = [sp_d for sp_d, _ in planned]
+    scheds = [sch for _, sch in planned]
+    V, S = len(planned), len(seeds)
+    a_all = np.stack([sch.a for sch in scheds]).astype(np.float32)  # (V,R,M)
+    e_all = np.stack([sch.E for sch in scheds]).astype(np.int32)    # (V,R)
+    e_max = max(1, int(e_all.max()))
+
+    spec = engine.make_spec(framework, cfg, masked_loss_metric=True, **hyper)
+    raw = engine.build_round_fn(spec, cfg, x, y, e_max=e_max, jit=False,
+                                gather=False)
+    eval_fn = None
+    do_eval = np.zeros(rounds, np.float32)
+    if test_data is not None:
+        eval_fn = engine.build_eval_fn(
+            spec, cfg, *test_data, gamma=eval_gamma, jit=False,
+            client_data={"x": x, "y": y} if framework == "splitme" else None)
+        if eval_every:
+            do_eval[eval_every - 1::eval_every] = 1.0
+        do_eval[rounds - 1] = 1.0
+
+    def sweep(init_keys, key_arr, xs):
+        params_s = jax.vmap(spec.init_fn)(init_keys)          # (S, …)
+        params = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (V,) + p.shape), params_s)
+
+        def body(carry, xr):
+            params, keys = carry                  # keys (S, 2): the seed
+            ks = jax.vmap(jax.random.split)(keys)  # chain is variant-free
+            nkeys, subs = ks[:, 0], ks[:, 1]
+            nparams, phase_losses = jax.vmap(
+                lambda pv, av, ev: jax.vmap(raw, in_axes=(0, None, None, 0))(
+                    pv, av, ev, subs))(params, xr["a"], xr["e"])
+            loss_row = jnp.stack(phase_losses, -1)        # (V, S, n_ph)
+            if eval_fn is None:
+                acc = jnp.full((V, S), jnp.nan, jnp.float32)
+            else:
+                acc = jax.lax.cond(
+                    xr["do_eval"] > 0,
+                    jax.vmap(jax.vmap(eval_fn)),
+                    lambda p: jnp.full((V, S), jnp.nan, jnp.float32),
+                    nparams)
+            return (nparams, nkeys), {"loss": loss_row, "acc": acc}
+
+        (params, _), ys = jax.lax.scan(body, (params, key_arr), xs)
+        return params, ys
+
+    guard = (jax.transfer_guard_device_to_host("disallow")
+             if strict_transfers else contextlib.nullcontext())
+    with guard:
+        init_keys = jnp.stack([jax.random.PRNGKey(s + spec.init_key_offset)
+                               for s in seeds])
+        key0 = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+        xs = {"a": a_all.transpose(1, 0, 2), "e": e_all.T,
+              "do_eval": do_eval}
+        params, ys = jax.jit(sweep)(init_keys, key0, xs)
+    host = _host_fetch(ys)                 # ONE transfer for the sweep
+
+    results = []
+    for v in range(V):
+        losses = np.transpose(host["loss"][:, v], (1, 0, 2))  # (S, R, n_ph)
+        acc_rounds = np.asarray(host["acc"][:, v])            # (R, S)
+        comm, nsel, sim, cost = _schedule_system_metrics(
+            spec, scheds[v], sps[v])
+        res = CampaignResult(
+            framework=framework, seeds=tuple(seeds), schedule=scheds[v],
+            params=jax.tree.map(lambda p: p[v], params), losses=losses,
+            metrics=_make_metrics(
+                sched=scheds[v], comm=comm, nsel=nsel, sim=sim, cost=cost,
+                losses=losses,
+                acc_rounds=acc_rounds if test_data is not None else None),
+            accuracy_per_round=(acc_rounds if test_data is not None
+                                else None))
+        if test_data is not None:
+            res.accuracy = acc_rounds[rounds - 1]
+        results.append(res)
+    return results

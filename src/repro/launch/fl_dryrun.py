@@ -1,37 +1,139 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Dry-run of the paper's OWN technique on the production mesh.
 
-Lowers one global round of (a) SplitMe and (b) vanilla SFL — the paper's
-baseline — with M clients sharded over the mesh data axes, for E ∈ {1, 10},
-and compares collective traffic.  The paper's claim ("reduce the
-multiple-communication-per-round level of SFL to one-communication-per-
+Lowers one global round of (a) SplitMe — the engine's shard_map round via
+``repro.core.distributed.make_splitme_round`` — and (b) vanilla SFL — the
+hand-written per-step boundary-exchange round kept HERE as dry-run
+collective accounting — with M clients sharded over the mesh data axes, for
+E ∈ {1, 10}, and compares collective traffic.  The paper's claim ("reduce
+the multiple-communication-per-round level of SFL to one-communication-per-
 round") becomes a structural property of the lowered HLO:
 
-    SplitMe  : collective bytes CONSTANT in E (one psum per round + Step-4
-               Gram psum)
+    SplitMe  : collective bytes CONSTANT in E (one fused all-reduce per
+               round + Step-4 Gram psum)
     vanilla  : collective bytes ∝ E (two boundary permutes per local step)
 
     PYTHONPATH=src python -m repro.launch.fl_dryrun [--multipod]
+
+(The XLA host-device flag is set only when run as a script, so importing
+this module — e.g. for the SFL dry-run round — never touches jax state.)
 """
 import argparse
 import json
+import os
 import time
 from pathlib import Path
 
+if __name__ == "__main__":
+    # append, don't replace: the forced device count must survive a
+    # user-supplied XLA_FLAGS (the 16x16 mesh needs 256 devices)
+    _flag = "--xla_force_host_platform_device_count=512"
+    if _flag not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = \
+            f"{os.environ.get('XLA_FLAGS', '')} {_flag}".strip()
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from repro.configs.splitme_dnn import DNN10
+from repro.configs.splitme_dnn import DNN10, DNNConfig
 from repro.core import dnn
-from repro.core.distributed import (make_distributed_inversion,
-                                    make_sfl_round, make_splitme_round)
+from repro.core.distributed import (_client_axes, make_distributed_inversion,
+                                    make_splitme_round)
 from repro.launch.mesh import make_production_mesh
 from repro.roofline.analysis import parse_collectives
 
 RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
 
+
+# ---------------------------------------------------------------------------
+# Vanilla-SFL round with the per-batch boundary exchange made explicit.
+# This is DRY-RUN COLLECTIVE ACCOUNTING for the paper's baseline, not a
+# production path (the engine's "sfl" spec trains the same joint gradients
+# locally and only *counts* the boundary bits in its comm_model) — which is
+# why it lives here and not in repro.core.
+# ---------------------------------------------------------------------------
+
+def _steps_scan(step, carry, keys, unroll_steps: bool):
+    """lax.scan over local updates, or python-unrolled (the dry-run needs
+    unrolled bodies so per-step collectives are counted E times)."""
+    if not unroll_steps:
+        carry, losses = jax.lax.scan(step, carry, keys)
+        return carry, losses
+    losses = []
+    for i in range(keys.shape[0]):
+        carry, l = step(carry, keys[i])
+        losses.append(l)
+    return carry, jnp.stack(losses)
+
+
+def make_sfl_round(cfg: DNNConfig, mesh, *, n_clients: int,
+                   samples_per_client: int, E: int, batch: int = 32,
+                   lr: float = 0.05, unroll_steps: bool = False):
+    """Vanilla SFL (SplitFed) round with the per-batch boundary exchange
+    made explicit: each local step all-gathers the smashed batch to the
+    server tier and scatter-reduces the boundary gradient back — E times
+    per round per client (the traffic SplitMe eliminates)."""
+    axes = _client_axes(mesh)
+
+    def local_round(w_c, w_s, x, y, key):
+        def per_client(x_m, y_m, key_m):
+            def step(carry, k):
+                wc, ws = carry
+                idx = jax.random.randint(k, (batch,), 0, x_m.shape[0])
+                xb, yb = x_m[idx], y_m[idx]
+
+                def client_half(wc):
+                    return dnn.client_forward(wc, xb, cfg)
+
+                smashed, vjp_c = jax.vjp(client_half, wc)
+                # --- boundary exchange #1: smashed data -> server tier ----
+                # point-to-point xApp -> rApp transfer = collective-permute
+                size = mesh.shape["model"]
+                up = [(i, (i + 1) % size) for i in range(size)]
+                down = [(i, (i - 1) % size) for i in range(size)]
+                smashed_srv = jax.lax.ppermute(smashed, "model", up)
+
+                def server_loss(ws, h):
+                    logits = dnn.server_forward(ws, h, cfg)
+                    logp = jax.nn.log_softmax(logits, -1)
+                    return -jnp.mean(jnp.take_along_axis(
+                        logp, yb[:, None], axis=1))
+
+                loss, (g_ws, g_h) = jax.value_and_grad(
+                    server_loss, argnums=(0, 1))(ws, smashed_srv)
+                # --- boundary exchange #2: gradient -> client tier --------
+                g_h_back = jax.lax.ppermute(g_h, "model", down)
+                (g_wc,) = vjp_c(g_h_back)
+                wc = jax.tree.map(lambda p, g: p - lr * g, wc, g_wc)
+                ws = jax.tree.map(lambda p, g: p - lr * g, ws, g_ws)
+                return (wc, ws), loss
+
+            (wc, ws), _ = _steps_scan(step, (w_c, w_s),
+                                      jax.random.split(key_m, E),
+                                      unroll_steps)
+            return wc, ws
+
+        keys = jax.random.split(key, x.shape[0])
+        wc_new, ws_new = jax.vmap(per_client)(x, y, keys)
+        mean_local = lambda t: jax.tree.map(lambda a: jnp.mean(a, 0), t)
+        wc_new, ws_new = mean_local(wc_new), mean_local(ws_new)
+        scale = 1.0 / jax.lax.psum(1.0, axes)
+        wc_agg = jax.tree.map(lambda a: jax.lax.psum(a * scale, axes), wc_new)
+        ws_agg = jax.tree.map(lambda a: jax.lax.psum(a * scale, axes), ws_new)
+        return wc_agg, ws_agg
+
+    from jax.experimental.shard_map import shard_map
+    spec_clients = P(axes)
+    spec_rep = P()
+    return shard_map(local_round, mesh=mesh,
+                     in_specs=(spec_rep, spec_rep, spec_clients,
+                               spec_clients, spec_rep),
+                     out_specs=(spec_rep, spec_rep), check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# Lowering + collective accounting
+# ---------------------------------------------------------------------------
 
 def lower_round(kind: str, mesh, M: int, n: int, E: int):
     cfg = DNN10
@@ -63,12 +165,15 @@ def lower_round(kind: str, mesh, M: int, n: int, E: int):
     with mesh:
         compiled = jax.jit(fn).lower(*args).compile()
     colls = parse_collectives(compiled.as_text())
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jaxlib: one dict per device
+        cost = cost[0] if cost else {}
     return {
         "collective_bytes": float(sum(c.result_bytes for c in colls)),
         "collective_s": float(sum(c.wire_seconds for c in colls)),
         "counts": {k: sum(1 for c in colls if c.kind == k)
                    for k in {c.kind for c in colls}},
-        "flops": float(compiled.cost_analysis().get("flops", 0.0)),
+        "flops": float(cost.get("flops", 0.0)),
     }
 
 

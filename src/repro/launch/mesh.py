@@ -32,6 +32,12 @@ def make_host_mesh():
     return _make_mesh((1, 1), ("data", "model"))
 
 
+def make_cpu_mesh(data: int):
+    """data×1 CPU mesh (multi-device parity tests under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    return _make_mesh((data, 1), ("data", "model"))
+
+
 # TPU v5e hardware constants for the roofline (per chip / per link)
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # bytes/s

@@ -113,3 +113,89 @@ def test_splitme_campaign_evaluates(small_data):
                                 cd, rounds=4, seeds=(0,), test_data=test)
     assert res.accuracy.shape == (1,)
     assert res.accuracy[0] > 0.4          # 3 classes, chance = 1/3
+
+
+def test_scanned_campaign_single_host_transfer(small_data, monkeypatch):
+    """The scanned campaign pulls metrics device→host EXACTLY once, and its
+    device phase performs zero d2h transfers (hard-enforced by
+    ``strict_transfers``, which arms jax's transfer guard)."""
+    cd, test = small_data
+    calls = []
+    real = campaign._host_fetch
+    monkeypatch.setattr(campaign, "_host_fetch",
+                        lambda tree: (calls.append(1), real(tree))[1])
+    res = campaign.run_campaign(
+        "splitme", DNN10, SystemParams(M=12, seed=0), cd, rounds=ROUNDS,
+        seeds=(0, 1), test_data=test, strict_transfers=True)
+    assert len(calls) == 1
+    assert np.isfinite(res.losses).all()
+    # the python loop pulls once per round instead
+    calls.clear()
+    campaign.run_campaign("oranfed", DNN10, SystemParams(M=12, seed=0), cd,
+                          rounds=ROUNDS, seeds=(0, 1), E=5, scan=False)
+    assert len(calls) == ROUNDS
+
+
+def test_scanned_campaign_matches_python_loop(small_data):
+    """lax.scan-over-rounds reproduces the per-round python loop (identical
+    round functions and RNG chains; scan just removes the host round trip)."""
+    cd, _ = small_data
+    for fw, kw in (("fedavg", {"K": 4, "E": 5}), ("splitme", {})):
+        res_s = campaign.run_campaign(fw, DNN10, SystemParams(M=12, seed=0),
+                                      cd, rounds=ROUNDS, seeds=SEEDS, **kw)
+        res_l = campaign.run_campaign(fw, DNN10, SystemParams(M=12, seed=0),
+                                      cd, rounds=ROUNDS, seeds=SEEDS,
+                                      scan=False, **kw)
+        np.testing.assert_allclose(res_s.losses, res_l.losses, atol=1e-6,
+                                   rtol=0)
+        for i in range(len(SEEDS)):
+            _leaves_close(res_s.params_for(i), res_l.params_for(i),
+                          atol=1e-6)
+
+
+def test_sharded_campaign_matches_gathered(small_data):
+    """mesh= mode (scan over shard_map rounds, seeds vmapped) reproduces the
+    single-device gathered campaign."""
+    from repro.launch.mesh import make_host_mesh
+    cd, test = small_data
+    mesh = make_host_mesh()
+    res_m = campaign.run_campaign("splitme", DNN10, SystemParams(M=12, seed=0),
+                                  cd, rounds=ROUNDS, seeds=(0, 1), mesh=mesh,
+                                  test_data=test)
+    res_g = campaign.run_campaign("splitme", DNN10, SystemParams(M=12, seed=0),
+                                  cd, rounds=ROUNDS, seeds=(0, 1),
+                                  test_data=test)
+    np.testing.assert_allclose(res_m.losses, res_g.losses, atol=1e-5, rtol=0)
+    for i in range(2):
+        _leaves_close(res_m.params_for(i), res_g.params_for(i), atol=1e-5)
+    np.testing.assert_allclose(res_m.accuracy, res_g.accuracy, atol=1e-6)
+
+
+def test_config_sweep_vmapped_matches_serial(small_data, monkeypatch):
+    """One compiled scan over (variant, seed) pairs == per-variant campaigns,
+    with a single host transfer for the whole sweep."""
+    cd, test = small_data
+    sps = [SystemParams(M=12, seed=0), SystemParams(M=12, seed=0, B=5e8)]
+    calls = []
+    real = campaign._host_fetch
+    monkeypatch.setattr(campaign, "_host_fetch",
+                        lambda tree: (calls.append(1), real(tree))[1])
+    sweep = campaign.run_config_sweep("oranfed", DNN10, sps, cd,
+                                      rounds=ROUNDS, seeds=(0, 1), E=5,
+                                      test_data=test)
+    assert len(calls) == 1
+    serial = campaign.run_config_sweep("oranfed", DNN10, sps, cd,
+                                       rounds=ROUNDS, seeds=(0, 1), E=5,
+                                       test_data=test, vmap_configs=False)
+    assert len(sweep) == len(serial) == 2
+    for v in range(2):
+        np.testing.assert_allclose(sweep[v].losses, serial[v].losses,
+                                   atol=1e-5, rtol=0)
+        np.testing.assert_allclose(sweep[v].accuracy, serial[v].accuracy,
+                                   atol=1e-6)
+        for r in range(ROUNDS):
+            np.testing.assert_allclose(sweep[v].metrics[r].comm_bits,
+                                       serial[v].metrics[r].comm_bits)
+        for i in range(2):
+            _leaves_close(sweep[v].params_for(i), serial[v].params_for(i),
+                          atol=2e-3)

@@ -1,4 +1,9 @@
-"""Distributed SplitMe/SFL rounds (shard_map) + MoE dispatch variants."""
+"""Distributed SplitMe/SFL rounds (shard_map) + MoE dispatch variants.
+
+``make_splitme_round`` is now an engine adapter (the shard_map round lives
+in ``repro.core.engine.build_sharded_round_fn``); the hand-written vanilla
+SFL boundary-exchange round moved to ``repro.launch.fl_dryrun`` (dry-run
+collective accounting only)."""
 # (mesh construction feature-detects jax.sharding.AxisType; see launch/mesh)
 import jax
 import jax.numpy as jnp
@@ -8,7 +13,8 @@ import pytest
 from repro.configs.splitme_dnn import DNN10
 from repro.core import dnn
 from repro.core.distributed import (make_distributed_inversion,
-                                    make_sfl_round, make_splitme_round)
+                                    make_splitme_round)
+from repro.launch.fl_dryrun import make_sfl_round
 from repro.launch.mesh import make_host_mesh
 
 

@@ -265,6 +265,34 @@ def test_baseline_engines_match_seed(small_data, name):
     _assert_params_close(tr.params, ref.params, atol=1e-6)
 
 
+def test_sharded_round_matches_engine_host_mesh():
+    """shard_map engine round == single-device engine round (1-device mesh:
+    the aggregation order is identical, so parity is exact)."""
+    from sharded_parity_check import run_check   # sibling test-dir module
+    run_check(data_shards=1)
+
+
+def test_sharded_round_matches_engine_multidevice():
+    """Same parity on a REAL multi-device CPU mesh (4 forced host devices,
+    clients sharded 2-per-device, cross-shard psum reassociation included).
+    Runs in a subprocess because device count is fixed at first jax init."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = f"{root / 'src'}:{env.get('PYTHONPATH', '')}"
+    out = subprocess.run(
+        [sys.executable, str(root / "tests" / "sharded_parity_check.py"),
+         "4"],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert out.returncode == 0, f"stdout:{out.stdout}\nstderr:{out.stderr}"
+    assert "PARITY_OK" in out.stdout
+
+
 def test_shared_system_params_not_mutated(small_data):
     """Regression: the seed trainers overwrote omega/S_m/Q_C/Q_S in place on
     the caller's SystemParams, so sequential framework runs on one instance
