@@ -57,6 +57,9 @@ def run(fast: bool = False):
         t0 = time.perf_counter()
         for k in range(rounds[name]):
             tr.run_round(eval_acc=(k % 5 == 4 or k == rounds[name] - 1))
+        # async serial trainers buffer device-array metrics; resolve them
+        # in ONE device→host transfer after the round loop
+        tr.fetch_history()
         wall_us = (time.perf_counter() - t0) / rounds[name] * 1e6
         h = tr.history
         acc = tr.evaluate()
@@ -110,8 +113,10 @@ def run(fast: bool = False):
     for name, cls, kw in camp_specs:
         t0 = time.perf_counter()
         for s in range(n_seeds):
+            # interactive=True keeps this baseline's documented semantics:
+            # the PR-1 serial loop with a float() metric pull EVERY round
             tr = cls(DNN10, SystemParams(seed=0), copy.deepcopy(cd),
-                     (Xte, yte), seed=s, **kw)
+                     (Xte, yte), seed=s, interactive=True, **kw)
             for _ in range(camp_rounds):
                 tr.run_round()
         serial_s = time.perf_counter() - t0
@@ -157,6 +162,100 @@ def run(fast: bool = False):
         rows.append((f"campaign_scan_speedup_{name}",
                      mode_stats["scanned"]["s"] / run_rounds * 1e6,
                      f"scanned_vs_python_loop={scanned_speedup:.2f}x"))
+
+    # ------------------------------------------------------------------
+    # Kernel-dispatch / precision policy modes (the engine hot path through
+    # repro.kernels.dispatch):
+    #   reference   — kernels forced OFF, pure-jnp f32
+    #   kernel      — auto per-op dispatch (Pallas on TPU; on CPU auto
+    #                 resolves to the reference impls — interpret mode is
+    #                 for parity, not speed — so this mode measures the
+    #                 dispatch layer's overhead, which must be ~zero)
+    #   kernel_bf16 — auto dispatch + bf16 activations / f32 accumulators
+    # One scanned SplitMe campaign per mode; rounds/sec + steps/sec land in
+    # the top-level BENCH_fl.json as the perf trajectory baseline.
+    # ------------------------------------------------------------------
+    from repro.kernels import dispatch
+
+    pol_rounds = 4 if fast else 12      # timed steady-state rounds / repeat
+    warmup = 2                          # compile + first dispatch excluded
+    pol_modes = ("reference", "kernel", "kernel_bf16")
+    trainers = {}
+    for mode in pol_modes:
+        tr = SplitMeTrainer(DNN10, SystemParams(seed=0), copy.deepcopy(cd),
+                            (Xte, yte), seed=0, kernel_policy=mode)
+        for _ in range(warmup):
+            tr.run_round()
+        jax.block_until_ready(tr.w_c)
+        trainers[mode] = tr
+    # repeats INTERLEAVED across the modes, alternating the within-cycle
+    # order (A/B/C then C/B/A) so ambient-load drift cancels instead of
+    # systematically taxing whichever mode runs last.  SplitMe's adaptive
+    # policy shrinks E/|A_t| across the windows, but every mode executes
+    # the identical schedule, so aggregate totals stay comparable.
+    n_reps = 4
+    times = {mode: [] for mode in pol_modes}
+    for r in range(n_reps):
+        order = pol_modes if r % 2 == 0 else tuple(reversed(pol_modes))
+        for mode in order:
+            tr = trainers[mode]
+            t0 = time.perf_counter()
+            for _ in range(pol_rounds):
+                tr.run_round()
+            jax.block_until_ready(tr.w_c)
+            times[mode].append(time.perf_counter() - t0)
+    mode_stats = {}
+    for mode, tr in trainers.items():
+        # aggregate executed local-SGD steps over ALL timed windows: E_t
+        # per selected client per round, two mutual-learning phases
+        # (E/n_selected are schedule-side ints — no device sync).  Total
+        # steps / total time is the noise-robust throughput: every mode
+        # executes the identical schedule and the interleaving spreads
+        # ambient load evenly across modes.
+        timed = tr.history[warmup:warmup + n_reps * pol_rounds]
+        steps = sum(m.E * m.n_selected for m in timed) * 2
+        dt = sum(times[mode])
+        tr.fetch_history()
+        pol = dispatch.get_policy(mode)
+        mode_stats[mode] = {
+            "s": dt,
+            "rounds_per_sec": n_reps * pol_rounds / dt,
+            "steps_per_sec": steps / dt,
+            "resolved": {"kl_mutual": bool(pol.kl_mutual),
+                         "ridge_gram": bool(pol.ridge_gram),
+                         "compute_dtype": pol.precision.compute},
+        }
+        rows.append((f"round_policy_{mode}_splitme",
+                     dt / (n_reps * pol_rounds) * 1e6,
+                     f"rounds_per_sec={mode_stats[mode]['rounds_per_sec']:.2f};"
+                     f"steps_per_sec={mode_stats[mode]['steps_per_sec']:.0f}"))
+    bench_fl = {
+        "backend": jax.default_backend(),
+        "framework": "splitme",
+        "timed_rounds": pol_rounds,
+        "warmup_rounds": warmup,
+        "note": "aggregate throughput over 4 order-alternating interleaved "
+                "timed windows per mode, compile/warmup excluded; every "
+                "mode executes the identical adaptive schedule.  On CPU "
+                "the auto kernel "
+                "policy resolves to the reference impls, so 'kernel' "
+                "measures dispatch overhead — the kernel win itself is a "
+                "TPU property",
+        "modes": mode_stats,
+        # when a mode's RESOLVED policy equals reference's (all of them on
+        # CPU), the compiled programs are identical and the true speedup is
+        # 1.0 by construction — the measured ratio shows the estimator's
+        # noise floor
+        "resolves_same_as_reference": {
+            m: dispatch.get_policy(m) == dispatch.get_policy("reference")
+            for m in pol_modes},
+        "kernel_bf16_vs_reference_speedup":
+            mode_stats["kernel_bf16"]["steps_per_sec"]
+            / mode_stats["reference"]["steps_per_sec"],
+    }
+    (Path(__file__).resolve().parents[1] / "BENCH_fl.json").write_text(
+        json.dumps(bench_fl, indent=1))
+    summary["round_policy_modes_splitme"] = bench_fl
 
     RESULTS.mkdir(exist_ok=True, parents=True)
     (RESULTS / "fl_frameworks.json").write_text(json.dumps(summary, indent=1))

@@ -43,6 +43,11 @@ def main():
                     help="campaign mode: fuse an eval round into the scan "
                          "every K rounds (accuracy curve, zero extra host "
                          "syncs)")
+    ap.add_argument("--policy", default=None,
+                    choices=["reference", "kernel", "kernel_bf16"],
+                    help="kernel dispatch / precision policy (default: "
+                         "auto by backend — Pallas kernels on TPU, "
+                         "reference jnp on CPU)")
     args = ap.parse_args()
 
     X, y = oran.generate(n_per_class=2000, seed=0)
@@ -65,7 +70,8 @@ def main():
             res = campaign.run_campaign(name, DNN10, SystemParams(seed=0),
                                         clients, rounds=rounds, seeds=seeds,
                                         test_data=(Xte, yte),
-                                        eval_every=args.eval_every, **kw)
+                                        eval_every=args.eval_every,
+                                        policy=args.policy, **kw)
             acc = res.accuracy
             print(f"[{name}] {len(seeds)} seeds x {rounds} rounds: "
                   f"acc={acc.mean():.3f}±{acc.std():.3f} "
@@ -79,7 +85,8 @@ def main():
                 print(f"[{name}] fused-eval accuracy curve: {curve}")
         return
 
-    tr = SplitMeTrainer(DNN10, sp, clients, (Xte, yte), seed=0)
+    tr = SplitMeTrainer(DNN10, sp, clients, (Xte, yte), seed=0,
+                        kernel_policy=args.policy, interactive=True)
     t0 = time.time()
     for k in range(args.rounds):
         m = tr.run_round(eval_acc=(k % 5 == 4))

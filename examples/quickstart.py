@@ -21,7 +21,10 @@ def main():
     sp = SystemParams()
     clients = oran.partition_non_iid(Xtr, ytr, sp.M,
                                      samples_per_client=64, seed=0)
-    trainer = SplitMeTrainer(DNN10, sp, clients, (Xte, yte), seed=0)
+    # interactive=True: metrics come back as floats each round (this demo
+    # prints them immediately, so there is no eval overlap to win)
+    trainer = SplitMeTrainer(DNN10, sp, clients, (Xte, yte), seed=0,
+                             interactive=True)
     print("round | selected | E | comm MB | latency ms | client KL")
     for k in range(10):
         m = trainer.run_round()

@@ -9,8 +9,11 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== pytest -m 'not slow' =="
-python -m pytest -q -m "not slow"
+echo "== pytest -m 'not slow and not kernels' =="
+python -m pytest -q -m "not slow and not kernels"
+
+echo "== kernel parity (Pallas interpret mode) =="
+REPRO_PALLAS_INTERPRET=1 python -m pytest -q -m kernels
 
 echo "== benchmarks (fast, fl_frameworks) =="
 python -m benchmarks.run --fast --only fl_frameworks

@@ -37,16 +37,21 @@ class _FLBase:
 
     def __init__(self, cfg: DNNConfig, sp: SystemParams, client_data,
                  test_data, lr: float, E: int, batch_size: int, seed: int,
-                 K: int = 10):
+                 K: int = 10, kernel_policy=None, interactive: bool = False):
         self.cfg, self.E = cfg, E
         self.x = jnp.asarray(client_data["x"])
         self.y = jnp.asarray(client_data["y"])
         self.x_test, self.y_test = map(jnp.asarray, test_data)
+        # interactive=True restores the per-round float() metric pull; the
+        # default buffers device arrays so eval overlaps the next round's
+        # dispatch (fetch_history() syncs once at campaign end)
+        self.interactive = interactive
         self.sp, self.policy = engine.make_policy(
             self.framework, sp, cfg, seed=seed, K=K, E=E)
         self.key = jax.random.PRNGKey(seed)
         self._spec = engine.make_spec(self.framework, cfg, lr=lr,
-                                      batch_size=batch_size)
+                                      batch_size=batch_size,
+                                      policy=kernel_policy)
         (self.params,) = self._spec.init_fn(
             jax.random.PRNGKey(seed + self._spec.init_key_offset))
         self.history: List[RoundMetrics] = []
@@ -64,19 +69,31 @@ class _FLBase:
         (self.params,), (loss,) = self._round_fn(
             (self.params,), jnp.asarray(a, jnp.float32),
             jnp.asarray(self.E), sub)
-        return self._record(a, b, eval_acc, float(loss))
+        return self._record(a, b, eval_acc,
+                            float(loss) if self.interactive else loss)
 
     def evaluate(self) -> float:
         return float(self._eval_fn((self.params,)))
 
+    def fetch_history(self):
+        """Resolve buffered device-array metrics to floats in ONE
+        device→host transfer (call once at campaign end)."""
+        return engine.fetch_history(self.history)
+
     def _record(self, a, b, eval_acc, loss) -> RoundMetrics:
+        acc = float("nan")
+        if eval_acc:
+            # device array in async mode — the next round's dispatch
+            # overlaps this evaluation instead of blocking on float()
+            acc = self._eval_fn((self.params,))
+            if self.interactive:
+                acc = float(acc)
         m = RoundMetrics(
             round=self._round, n_selected=int(a.sum()), E=self.E,
             comm_bits=self._spec.comm_model(a, self.E, self.sp),
             sim_time=total_time(a, b, self.E, self.sp),
             cost=round_cost(a, b, self.E, self.sp),
-            client_loss=loss,
-            accuracy=self.evaluate() if eval_acc else float("nan"))
+            client_loss=loss, accuracy=acc)
         self._round += 1
         self.history.append(m)
         return m
@@ -89,9 +106,9 @@ class FedAvgTrainer(_FLBase):
 
     def __init__(self, cfg, sp, client_data, test_data, *, K: int = 10,
                  E: int = 10, lr: float = 0.05, batch_size: int = 32,
-                 seed: int = 0):
+                 seed: int = 0, **kw):
         super().__init__(cfg, sp, client_data, test_data, lr, E, batch_size,
-                         seed, K=K)
+                         seed, K=K, **kw)
         self.K = K
 
 
@@ -103,9 +120,9 @@ class SFLTrainer(_FLBase):
 
     def __init__(self, cfg, sp, client_data, test_data, *, K: int = 20,
                  E: int = 14, lr: float = 0.05, batch_size: int = 32,
-                 seed: int = 0):
+                 seed: int = 0, **kw):
         super().__init__(cfg, sp, client_data, test_data, lr, E, batch_size,
-                         seed, K=K)
+                         seed, K=K, **kw)
         self.K = K
 
 
@@ -116,6 +133,7 @@ class ORANFedTrainer(_FLBase):
     framework = "oranfed"
 
     def __init__(self, cfg, sp, client_data, test_data, *, E: int = 10,
-                 lr: float = 0.05, batch_size: int = 32, seed: int = 0):
+                 lr: float = 0.05, batch_size: int = 32, seed: int = 0,
+                 **kw):
         super().__init__(cfg, sp, client_data, test_data, lr, E, batch_size,
-                         seed)
+                         seed, **kw)

@@ -29,13 +29,31 @@ def init_mlp(key, dims: Sequence[int]) -> List[dict]:
 
 
 def mlp_forward(layers: List[dict], x: jax.Array, activation: str = "relu",
-                final_linear: bool = True) -> jax.Array:
+                final_linear: bool = True, precision=None) -> jax.Array:
+    """Forward pass.  ``precision`` (a ``repro.kernels.dispatch.Precision``,
+    or None for pure f32) applies the mixed-precision policy: inputs and
+    weights are cast to the compute dtype per matmul while accumulation and
+    bias add happen in the accum dtype (f32).  A final LINEAR output
+    (logits, ``final_linear=True``) is returned in the accum dtype so loss
+    reductions stay f32; with ``final_linear=False`` the returned
+    post-activation features (smashed data) are in the COMPUTE dtype —
+    that is the 16-bit payload that would cross the split boundary.
+    Master parameters are untouched, so autodiff yields f32 gradients."""
     act = activation_fn(activation)
+    if precision is None or not precision.is_mixed:
+        for i, p in enumerate(layers):
+            x = x @ p["w"] + p["b"]
+            if i < len(layers) - 1 or not final_linear:
+                x = act(x)
+        return x
+    cdt, adt = precision.compute_dtype, precision.accum_dtype
+    h = x.astype(cdt)
     for i, p in enumerate(layers):
-        x = x @ p["w"] + p["b"]
+        h = jnp.dot(h, p["w"].astype(cdt),
+                    preferred_element_type=adt) + p["b"].astype(adt)
         if i < len(layers) - 1 or not final_linear:
-            x = act(x)
-    return x
+            h = act(h).astype(cdt)
+    return h
 
 
 def mlp_activations(layers: List[dict], x: jax.Array,
@@ -80,26 +98,30 @@ def init_inverse_server(key, cfg: DNNConfig) -> List[dict]:
 
 
 def client_forward(params: List[dict], x: jax.Array,
-                   cfg: DNNConfig) -> jax.Array:
+                   cfg: DNNConfig, precision=None) -> jax.Array:
     """c(X): features at the split layer (post-activation)."""
-    return mlp_forward(params, x, cfg.activation, final_linear=False)
+    return mlp_forward(params, x, cfg.activation, final_linear=False,
+                       precision=precision)
 
 
 def server_forward(params: List[dict], h: jax.Array,
-                   cfg: DNNConfig) -> jax.Array:
+                   cfg: DNNConfig, precision=None) -> jax.Array:
     """s(h): logits over slice classes."""
-    return mlp_forward(params, h, cfg.activation, final_linear=True)
+    return mlp_forward(params, h, cfg.activation, final_linear=True,
+                       precision=precision)
 
 
 def inverse_server_forward(params: List[dict], y_onehot: jax.Array,
-                           cfg: DNNConfig) -> jax.Array:
+                           cfg: DNNConfig, precision=None) -> jax.Array:
     """s⁻¹(Y): label → split-layer feature space."""
-    return mlp_forward(params, y_onehot, cfg.activation, final_linear=True)
+    return mlp_forward(params, y_onehot, cfg.activation, final_linear=True,
+                       precision=precision)
 
 
 def full_forward(client: List[dict], server: List[dict], x: jax.Array,
-                 cfg: DNNConfig) -> jax.Array:
-    return server_forward(server, client_forward(client, x, cfg), cfg)
+                 cfg: DNNConfig, precision=None) -> jax.Array:
+    return server_forward(server, client_forward(client, x, cfg, precision),
+                          cfg, precision)
 
 
 def param_count(layers: List[dict]) -> int:

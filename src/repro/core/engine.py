@@ -42,6 +42,13 @@ Execution modes over that core:
   forward), fused into the scanned campaign via a per-round ``do_eval``
   mask so training never leaves the device between rounds.
 
+Numerics are governed by a ``repro.kernels.dispatch.KernelPolicy`` bound
+into the spec at ``make_spec(policy=...)`` time: the mutual-KL phase losses
+and the Step-4 Gram products dispatch to the Pallas kernels per the policy
+(auto: kernels on TPU, reference jnp elsewhere), and its ``Precision``
+casts the forwards to bf16 activations with f32 accumulators/master params
+— loss reductions and the masked aggregation stay f32.
+
 ``make_policy`` also prepares a private copy of the caller's
 ``SystemParams`` — the seed trainers mutated the shared instance in place,
 which silently corrupted sequential framework runs; the engine never writes
@@ -64,11 +71,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import dnn, mutual
+from repro.core import dnn
 from repro.core.allocation import solve_bandwidth, solve_p2
 from repro.core.cost import SystemParams
+from repro.core.inversion import invert_inverse_model
 from repro.core.selection import (SelectionState, initial_state,
                                   select_trainers, update_state)
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelPolicy
 
 Params = Any                     # pytree of arrays
 ParamsTuple = Tuple[Params, ...]
@@ -82,9 +92,24 @@ class RoundMetrics:
     comm_bits: float          # uplink volume this round (all selected)
     sim_time: float           # eq. 18 latency (s)
     cost: float               # eq. 20
+    # accuracy / losses may hold 0-d DEVICE arrays while a serial trainer
+    # runs non-interactively (no per-round host sync); ``fetch_history``
+    # resolves them to floats in one transfer at campaign end.
     accuracy: float = float("nan")
     client_loss: float = float("nan")
     server_loss: float = float("nan")
+
+
+def fetch_history(history) -> list:
+    """Resolve any buffered device-array metrics in a trainer's history to
+    python floats with ONE device→host transfer (the serial trainers'
+    async-metrics counterpart of the campaign runner's ``_host_fetch``)."""
+    vals = jax.device_get([(m.client_loss, m.server_loss, m.accuracy)
+                           for m in history])
+    for m, (c, s, a) in zip(history, vals):
+        m.client_loss, m.server_loss, m.accuracy = \
+            float(c), float(s), float(a)
+    return history
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +149,10 @@ class FrameworkSpec:
     # PRNGKey(seed + offset) initializes the parameters (the seed baselines
     # used seed+1 for init and seed for the round chain).
     init_key_offset: int = 0
+    # The RESOLVED kernel-dispatch/precision policy the phase losses were
+    # built with (``make_spec`` binds it; the builders and ``build_eval_fn``
+    # read it so one spec means one numerics everywhere).
+    policy: Optional[KernelPolicy] = None
 
 
 # ---------------------------------------------------------------------------
@@ -231,10 +260,33 @@ def _round_core(spec: FrameworkSpec, runners, params: ParamsTuple, ctx_c,
     return new_params, losses
 
 
+def _spec_policy(spec: FrameworkSpec,
+                 policy: Optional[KernelPolicy]) -> KernelPolicy:
+    """The policy a builder should honor: an explicit override, else the
+    one bound into the spec at ``make_spec`` time, else auto."""
+    return dispatch.get_policy(policy if policy is not None else spec.policy)
+
+
+def _bound_policy(spec: FrameworkSpec,
+                  policy: Optional[KernelPolicy]) -> KernelPolicy:
+    """Like ``_spec_policy`` for the ROUND builders, where the phase-loss
+    closures already captured the spec's policy at ``make_spec`` time: a
+    different ``policy`` here could only half-apply (dataset cast without
+    matching losses), so a mismatch is an error — rebuild the spec with
+    ``make_spec(..., policy=...)`` instead."""
+    bound = dispatch.get_policy(spec.policy)
+    if policy is not None and dispatch.get_policy(policy) != bound:
+        raise ValueError(
+            "round builders cannot override the spec-bound kernel policy "
+            f"(spec has {bound}); rebuild via make_spec(..., policy=...)")
+    return bound
+
+
 def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
                    x: jax.Array, y: jax.Array, *, e_max: int,
                    donate: bool = True, jit: bool = True,
-                   gather: bool = False):
+                   gather: bool = False,
+                   policy: Optional[KernelPolicy] = None):
     """Compile one federated round for `spec` over the fixed client dataset.
 
     Returns ``round_fn(params_tuple, a_mask, e_steps, key) ->
@@ -254,7 +306,18 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
     index — but skips their computation entirely.  The serial trainers keep
     the full-M round (a varying cohort size would recompile every round);
     the campaign runner knows the whole schedule up front and exploits it.
+
+    The kernel/precision policy is the one BOUND into the spec at
+    ``make_spec`` time (``policy`` may restate it, but a different value
+    raises — the phase losses already captured the bound policy).  The
+    engine-owned application here: under a mixed-precision policy the
+    CLIENT DATASET is cast to the compute dtype once per campaign, instead
+    of once per batch inside the loss (halves the x-gather traffic of
+    every local step).
     """
+    pol = _bound_policy(spec, policy)
+    if pol.precision.is_mixed:
+        x = x.astype(pol.precision.compute_dtype)
     M, n = x.shape[0], x.shape[1]
     y1 = jax.nn.one_hot(y, cfg.n_classes)
     ctx = {"x": x, "y": y, "y1": y1}
@@ -284,7 +347,8 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
 
 def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
                            n_clients: int, e_max: int, donate: bool = True,
-                           jit: bool = True, unroll_steps: bool = False):
+                           jit: bool = True, unroll_steps: bool = False,
+                           policy: Optional[KernelPolicy] = None):
     """Compile one federated round for `spec` with the CLIENT AXIS SHARDED
     over the mesh ``data``/``pod`` axes via ``shard_map``.
 
@@ -307,10 +371,17 @@ def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
     ``unroll_steps`` python-unrolls the local-SGD loop for the fl_dryrun
     collective accounting (per-step collectives — none for the engine's
     frameworks — would appear E times in the lowered HLO).
+
+    The kernel/precision policy rides on the spec (``policy`` may only
+    restate it; a mismatch raises): the phase losses inside the shard_map
+    body already dispatch per the spec-bound policy, and under a
+    mixed-precision policy each device's client-data slab is cast to the
+    compute dtype before the shard_map so the cast is sharded too.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
+    pol = _bound_policy(spec, policy)
     axes = client_axes(mesh)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     M = n_clients
@@ -334,6 +405,8 @@ def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
         out_specs=(P(), P()), check_rep=False)
 
     def round_fn(params: ParamsTuple, x, y, a_mask, e_steps, key):
+        if pol.precision.is_mixed:
+            x = x.astype(pol.precision.compute_dtype)
         keys = jax.random.split(key, n_ph * M).reshape(n_ph, M, -1)
         return sharded(params, x, y, a_mask, e_steps, keys)
 
@@ -447,24 +520,28 @@ def make_policy(name: str, sp: SystemParams, cfg: DNNConfig, *,
 # Spec factories (the registry)
 # ---------------------------------------------------------------------------
 
-def _ce_step(cfg: DNNConfig):
+def _ce_step(cfg: DNNConfig, pol: KernelPolicy):
+    prec = pol.precision
+
     def loss(w, x_b, y_b):
-        logits = dnn.mlp_forward(w, x_b, cfg.activation)
+        # forward in the policy's compute dtype; logits land in the accum
+        # dtype (f32), so the log_softmax + NLL reduction is pinned f32
+        logits = dnn.mlp_forward(w, x_b, cfg.activation, precision=prec)
         logp = jax.nn.log_softmax(logits, -1)
         return -jnp.mean(jnp.take_along_axis(logp, y_b[:, None], axis=1))
     return loss
 
 
 def _mlp_spec(name: str, cfg: DNNConfig, comm_model, *, lr: float,
-              batch_size: int) -> FrameworkSpec:
+              batch_size: int, pol: KernelPolicy) -> FrameworkSpec:
     phase = PhaseSpec(
-        name="local", param_idx=0, lr=lr, loss_fn=_ce_step(cfg),
+        name="local", param_idx=0, lr=lr, loss_fn=_ce_step(cfg, pol),
         data_key="x", target_fn=lambda params, updated, ctx: ctx["y"])
     return FrameworkSpec(
         name=name,
         init_fn=lambda key: (dnn.init_mlp(key, cfg.layer_dims),),
         phases=(phase,), comm_model=comm_model, batch_size=batch_size,
-        init_key_offset=1)
+        init_key_offset=1, policy=pol)
 
 
 def _as_float(x: np.ndarray):
@@ -474,15 +551,16 @@ def _as_float(x: np.ndarray):
 
 
 def _make_fedavg(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
-                 **_) -> FrameworkSpec:
+                 policy: Optional[KernelPolicy] = None, **_) -> FrameworkSpec:
     def comm(a, E, sp):
         # a: (M,) or a stacked-schedule (R, M); E: int or (R,)
         return _as_float(np.sum(a, axis=-1) * sp.d_model_bits)
-    return _mlp_spec("fedavg", cfg, comm, lr=lr, batch_size=batch_size)
+    return _mlp_spec("fedavg", cfg, comm, lr=lr, batch_size=batch_size,
+                     pol=dispatch.get_policy(policy))
 
 
 def _make_sfl(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
-              **_) -> FrameworkSpec:
+              policy: Optional[KernelPolicy] = None, **_) -> FrameworkSpec:
     # per local step: smashed up + boundary grads down, one batch each
     boundary_bits = 2 * batch_size * dnn.client_dims(cfg)[-1] * 32.0
 
@@ -490,46 +568,60 @@ def _make_sfl(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
         return _as_float(np.sum(a, axis=-1)
                          * (np.asarray(E, np.float64) * boundary_bits
                             + sp.omega * sp.d_model_bits))
-    return _mlp_spec("sfl", cfg, comm, lr=lr, batch_size=batch_size)
+    return _mlp_spec("sfl", cfg, comm, lr=lr, batch_size=batch_size,
+                     pol=dispatch.get_policy(policy))
 
 
 def _make_oranfed(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
-                  **_) -> FrameworkSpec:
+                  policy: Optional[KernelPolicy] = None, **_) -> FrameworkSpec:
     def comm(a, E, sp):
         return _as_float(np.sum(a, axis=-1) * sp.d_model_bits)
-    return _mlp_spec("oranfed", cfg, comm, lr=lr, batch_size=batch_size)
+    return _mlp_spec("oranfed", cfg, comm, lr=lr, batch_size=batch_size,
+                     pol=dispatch.get_policy(policy))
 
 
 def _make_splitme(cfg: DNNConfig, *, lr_c: float = 0.05, lr_s: float = 0.02,
                   temperature: float = 2.0, batch_size: int = 32,
-                  masked_loss_metric: bool = False, **_) -> FrameworkSpec:
+                  masked_loss_metric: bool = False,
+                  policy: Optional[KernelPolicy] = None, **_) -> FrameworkSpec:
     """SplitMe spec.  ``masked_loss_metric=False`` reproduces the seed
     trainer's loss metric (mean over the full E_max scan, frozen tail
     included) and requires ``e_max = sp.E_max``; ``True`` averages over the
     executed steps only, which lets the campaign runner scan exactly
     ``max(schedule E)`` steps.  The trained parameters are identical either
-    way (masked updates are exact no-ops)."""
+    way (masked updates are exact no-ops).
+
+    Both mutual-KL phase losses go through the kernel dispatch layer
+    (``dispatch.kl_loss``): the policy picks the fused online-softmax
+    Pallas kernel (closed-form custom_vjp) or the reference
+    ``mutual.kl_paper`` graph, and its precision casts the forwards to the
+    compute dtype (loss reductions stay f32 either way)."""
     tau = temperature
+    pol = dispatch.get_policy(policy)
+    prec = pol.precision
 
     def client_step(w, x_b, t_b):
         # f_C = D_KL(c(X) ‖ sg[s⁻¹(Y)])  (eq. 5, client side)
-        return mutual.client_loss(dnn.client_forward(w, x_b, cfg), t_b, tau)
+        feat = dnn.client_forward(w, x_b, cfg, precision=prec)
+        return dispatch.kl_loss(feat, t_b, temperature=tau, policy=pol)
 
     def server_step(w, y1_b, t_b):
         # f_S = D_KL(s⁻¹(Y) ‖ sg[c(X)])  (eq. 5, server side)
-        return mutual.server_loss(
-            dnn.inverse_server_forward(w, y1_b, cfg), t_b, tau)
+        inv = dnn.inverse_server_forward(w, y1_b, cfg, precision=prec)
+        return dispatch.kl_loss(inv, t_b, temperature=tau, policy=pol)
 
     def client_targets(params, updated, ctx):
         # Step 1: download s⁻¹(Y_m) once — fixed targets for the round
         return jax.vmap(
-            lambda y1m: dnn.inverse_server_forward(params[1], y1m, cfg)
+            lambda y1m: dnn.inverse_server_forward(params[1], y1m, cfg,
+                                                   precision=prec)
         )(ctx["y1"])
 
     def server_targets(params, updated, ctx):
         # Step 3: upload c(X_m) once, from the UPDATED per-client weights
         smashed = jax.vmap(
-            lambda w, xm: dnn.client_forward(w, xm, cfg))(updated[0], ctx["x"])
+            lambda w, xm: dnn.client_forward(w, xm, cfg, precision=prec)
+        )(updated[0], ctx["x"])
         return jax.lax.stop_gradient(smashed)
 
     def init(key):
@@ -548,7 +640,7 @@ def _make_splitme(cfg: DNNConfig, *, lr_c: float = 0.05, lr_s: float = 0.02,
             PhaseSpec("server", 1, lr_s, server_step, "y1", server_targets,
                       loss_over_mask=masked_loss_metric),
         ),
-        comm_model=comm, batch_size=batch_size)
+        comm_model=comm, batch_size=batch_size, policy=pol)
 
 
 _REGISTRY: Dict[str, Callable[..., FrameworkSpec]] = {
@@ -563,13 +655,18 @@ def framework_names() -> Tuple[str, ...]:
     return tuple(_REGISTRY)
 
 
-def make_spec(name: str, cfg: DNNConfig, **hyper) -> FrameworkSpec:
+def make_spec(name: str, cfg: DNNConfig, *,
+              policy: "dispatch.PolicyLike" = None, **hyper) -> FrameworkSpec:
+    """Build a framework spec.  ``policy`` (None / preset name /
+    ``KernelPolicy``) selects kernels and precision for the phase losses;
+    it is resolved once here and bound into the spec, so every builder
+    downstream (round fns, eval fn, campaign) shares one numerics."""
     try:
         factory = _REGISTRY[name]
     except KeyError:
         raise KeyError(
             f"unknown framework {name!r}; have {framework_names()}") from None
-    return factory(cfg, **hyper)
+    return factory(cfg, policy=dispatch.get_policy(policy), **hyper)
 
 
 # ---------------------------------------------------------------------------
@@ -578,7 +675,8 @@ def make_spec(name: str, cfg: DNNConfig, **hyper) -> FrameworkSpec:
 
 def build_eval_fn(spec: FrameworkSpec, cfg: DNNConfig, x_test, y_test, *,
                   client_data: Optional[Dict[str, Any]] = None,
-                  gamma: float = 1e-3, jit: bool = True):
+                  gamma: float = 1e-3, jit: bool = True,
+                  policy: Optional[KernelPolicy] = None):
     """Build ``accuracy(params_tuple) -> scalar`` for `spec`.
 
     Full-model frameworks evaluate the aggregated MLP directly.  SplitMe
@@ -587,14 +685,20 @@ def build_eval_fn(spec: FrameworkSpec, cfg: DNNConfig, x_test, y_test, *,
     pure (jit/vmap/cond-safe), so trainers call it jitted, the campaign
     runner vmaps it over the seed axis, and the scanned campaign embeds it
     behind a per-round ``do_eval`` mask without leaving the device.
+
+    The kernel/precision policy rides on the spec (``policy`` overrides):
+    forwards run in the compute dtype and the Step-4 Gram products dispatch
+    to the ridge_gram kernel per the policy; the Gram accumulation, ridge
+    solve and the accuracy reduction itself stay pinned f32.
     """
+    pol = _spec_policy(spec, policy)
+    prec = pol.precision
     x_test = jnp.asarray(x_test)
     y_test = jnp.asarray(y_test)
     if spec.name == "splitme":
         if client_data is None:
             raise ValueError("splitme evaluation needs client_data for the "
                              "Step-4 Gram sums")
-        from repro.core.inversion import invert_inverse_model
         x = jnp.asarray(client_data["x"])
         y1 = jax.nn.one_hot(jnp.asarray(client_data["y"]), cfg.n_classes)
         flat_y = y1.reshape(-1, cfg.n_classes)
@@ -602,17 +706,19 @@ def build_eval_fn(spec: FrameworkSpec, cfg: DNNConfig, x_test, y_test, *,
         def accuracy(params: ParamsTuple) -> jax.Array:
             w_c, w_s_inv = params
             smashed = jax.vmap(
-                lambda xm: dnn.client_forward(w_c, xm, cfg))(x)
+                lambda xm: dnn.client_forward(w_c, xm, cfg, precision=prec)
+            )(x)
             w_s = invert_inverse_model(
                 w_s_inv, smashed.reshape(-1, smashed.shape[-1]), flat_y, cfg,
-                gamma=gamma)
-            logits = dnn.full_forward(w_c, w_s, x_test, cfg)
+                gamma=gamma, policy=pol)
+            logits = dnn.full_forward(w_c, w_s, x_test, cfg, precision=prec)
             return jnp.mean((jnp.argmax(logits, -1) == y_test)
                             .astype(jnp.float32))
     else:
         def accuracy(params: ParamsTuple) -> jax.Array:
             (w,) = params
-            logits = dnn.mlp_forward(w, x_test, cfg.activation)
+            logits = dnn.mlp_forward(w, x_test, cfg.activation,
+                                     precision=prec)
             return jnp.mean((jnp.argmax(logits, -1) == y_test)
                             .astype(jnp.float32))
 

@@ -11,11 +11,15 @@ with the labels.  Both Gram sums are all-reduce ops across the selected
 rApps; on the mesh that is ``jax.lax.psum`` over the client axis.  Each layer
 trains in one shot — a single communication round recovers all of s(·).
 
-The Gram products are the compute hot-spot; ``use_kernel=True`` routes them
-through the Pallas ridge_gram kernel.
+The Gram products are the compute hot-spot; they route through the kernel
+dispatch layer (``repro.kernels.dispatch.gram``), which picks the Pallas
+ridge_gram kernel or the reference f32 matmul per the ``KernelPolicy``
+(default: auto by backend — kernel on TPU, reference on CPU).  The legacy
+``use_kernel`` flag force-overrides the policy's gram bit.
 """
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import List, Optional
 
 import jax
@@ -23,16 +27,19 @@ import jax.numpy as jnp
 
 from repro.configs.splitme_dnn import DNNConfig
 from repro.core import dnn
+from repro.kernels import dispatch
+from repro.kernels.dispatch import KernelPolicy
 from repro.models.common import activation_fn
 
 
-def _gram(o: jax.Array, z: jax.Array, use_kernel: bool):
-    """Returns (OᵀO, OᵀZ) in float32."""
-    if use_kernel:
-        from repro.kernels.ridge_gram import ops as rg
-        return rg.gram(o, o), rg.gram(o, z)
-    o32 = o.astype(jnp.float32)
-    return o32.T @ o32, o32.T @ z.astype(jnp.float32)
+def _gram(o: jax.Array, z: jax.Array,
+          policy: Optional[KernelPolicy] = None):
+    """Returns (OᵀO, OᵀZ) in float32 via the kernel dispatch layer.  The
+    policy is resolved by the caller (or auto-resolved here for direct
+    use); selection is a trace-time Python branch on a frozen dataclass,
+    so flag flips never retrace a shared closure."""
+    pol = dispatch.get_policy(policy)
+    return dispatch.gram(o, o, policy=pol), dispatch.gram(o, z, policy=pol)
 
 
 def _augment(o: jax.Array) -> jax.Array:
@@ -46,14 +53,23 @@ def invert_inverse_model(inverse_params: List[dict],
                          cfg: DNNConfig,
                          gamma: float = 1e-3,
                          axis_name: Optional[str] = None,
-                         use_kernel: bool = False) -> List[dict]:
+                         use_kernel: Optional[bool] = None,
+                         policy: Optional[KernelPolicy] = None
+                         ) -> List[dict]:
     """Recover the server-side model s(·) from the trained s⁻¹(·).
 
     smashed: c(X_m) for this client's shard, (n, d_split).
     labels_onehot: (n, n_classes).
     axis_name: mesh axis of the selected rApps; the Gram sums are psum'd over
       it (the paper's GLOO all-reduce → TPU ICI all-reduce).
+    policy: kernel dispatch policy for the Gram products (None → auto by
+      backend); ``use_kernel`` (legacy) force-overrides its gram bit.
+    The ridge solve itself always runs f32 — the Grams accumulate f32 even
+    when the smashed activations arrive in the policy's compute dtype.
     """
+    pol = dispatch.get_policy(policy)
+    if use_kernel is not None:
+        pol = replace(pol, ridge_gram=use_kernel)
     act = activation_fn(cfg.activation)
     # supervised targets: activations of s⁻¹ on the labels, deepest first.
     # s⁻¹ activations [a_1 … a_L]; target for s's layer l (1-based) is
@@ -67,7 +83,7 @@ def invert_inverse_model(inverse_params: List[dict],
     o = smashed
     for l, z in enumerate(targets):
         o_aug = _augment(o)
-        a0, a1 = _gram(o_aug, z, use_kernel)
+        a0, a1 = _gram(o_aug, z, pol)
         if axis_name is not None:
             # one fused all-reduce per layer: both Gram sums cross the mesh
             # in a single concatenated payload (exact — elementwise sums)

@@ -30,6 +30,7 @@ from repro.configs.splitme_dnn import DNNConfig
 from repro.core import dnn, engine
 from repro.core.cost import SystemParams, round_cost, total_time
 from repro.core.engine import RoundMetrics  # re-export (seed import path)
+from repro.core.engine import fetch_history
 from repro.core.inversion import invert_inverse_model
 
 __all__ = ["RoundMetrics", "SplitMeTrainer"]
@@ -43,13 +44,20 @@ class SplitMeTrainer:
                  test_data: Tuple[np.ndarray, np.ndarray],
                  lr_c: float = 0.05, lr_s: float = 0.02,
                  temperature: float = 2.0, batch_size: int = 32,
-                 e_initial: int = 20, gamma: float = 1e-3, seed: int = 0):
+                 e_initial: int = 20, gamma: float = 1e-3, seed: int = 0,
+                 kernel_policy=None, interactive: bool = False):
         assert lr_c > lr_s, "Corollary 3: η_C > η_S (B_1 < B_2)"
         self.cfg = cfg
         self.x = jnp.asarray(client_data["x"])      # (M, n, d)
         self.y = jnp.asarray(client_data["y"])      # (M, n)
         self.x_test, self.y_test = map(jnp.asarray, test_data)
         self.gamma = gamma
+        # interactive=True restores per-round float() metric pulls (each
+        # run_round blocks on its losses).  The default keeps metrics as
+        # device arrays so round k+1 (and any fused eval) dispatches while
+        # round k's reductions are still in flight; fetch_history() pulls
+        # everything host-side in ONE transfer at campaign end.
+        self.interactive = interactive
         # private SystemParams copy + Alg. 1/P2 policy (never mutates `sp`)
         self.sp, self.policy = engine.make_policy(
             "splitme", sp, cfg, e_initial=e_initial,
@@ -57,7 +65,7 @@ class SplitMeTrainer:
         self.key = jax.random.PRNGKey(seed)
         self._spec = engine.make_spec(
             "splitme", cfg, lr_c=lr_c, lr_s=lr_s, temperature=temperature,
-            batch_size=batch_size)
+            batch_size=batch_size, policy=kernel_policy)
         self.w_c, self.w_s_inv = self._spec.init_fn(self.key)
         self.E = e_initial
         self.history: List[RoundMetrics] = []
@@ -88,38 +96,53 @@ class SplitMeTrainer:
             self.w_c, self.w_s_inv, jnp.asarray(a, jnp.float32),
             jnp.asarray(self.E), sub)
 
+        # metrics stay device arrays unless interactive: no float() sync in
+        # the round loop, so the next round's dispatch overlaps this eval
         m = RoundMetrics(
             round=self._round, n_selected=int(a.sum()), E=self.E,
             comm_bits=self._spec.comm_model(a, self.E, sp),
             sim_time=total_time(a, b, self.E, sp),
             cost=round_cost(a, b, self.E, sp),
-            client_loss=float(closs), server_loss=float(sloss))
+            client_loss=float(closs) if self.interactive else closs,
+            server_loss=float(sloss) if self.interactive else sloss)
         if eval_acc:
-            m.accuracy = self.evaluate()
+            acc = self._eval_fn((self.w_c, self.w_s_inv))
+            m.accuracy = float(acc) if self.interactive else acc
         self._round += 1
         self.history.append(m)
         return m
 
     # ------------------------------------------------------------------
-    def finalize(self, use_kernel: bool = False) -> List[dict]:
+    def fetch_history(self) -> List[RoundMetrics]:
+        """Resolve buffered device-array metrics to floats in ONE
+        device→host transfer (call once at campaign end)."""
+        return fetch_history(self.history)
+
+    # ------------------------------------------------------------------
+    def finalize(self, use_kernel: Optional[bool] = None) -> List[dict]:
         """Step 4: analytic inversion using all clients' smashed data.
 
         The Gram sums Σ OᵀO / Σ OᵀZ are the paper's all-reduce; here the sum
         over the stacked client axis is that all-reduce (it shards over the
-        mesh `data` axis under pjit).
+        mesh `data` axis under pjit).  The Gram products dispatch per the
+        trainer's kernel policy; ``use_kernel`` force-overrides.
         """
         cfg = self.cfg
+        prec = self._spec.policy.precision     # same numerics as _eval_fn
         smashed = jax.vmap(
-            lambda x: dnn.client_forward(self.w_c, x, cfg))(self.x)
+            lambda x: dnn.client_forward(self.w_c, x, cfg, precision=prec)
+        )(self.x)
         y1 = jax.nn.one_hot(self.y, cfg.n_classes)
         flat_s = smashed.reshape(-1, smashed.shape[-1])
         flat_y = y1.reshape(-1, cfg.n_classes)
         return invert_inverse_model(self.w_s_inv, flat_s, flat_y, cfg,
-                                    gamma=self.gamma, use_kernel=use_kernel)
+                                    gamma=self.gamma, use_kernel=use_kernel,
+                                    policy=self._spec.policy)
 
     def evaluate(self, w_server: Optional[List[dict]] = None) -> float:
         if w_server is not None:
             logits = dnn.full_forward(self.w_c, w_server, self.x_test,
-                                      self.cfg)
+                                      self.cfg,
+                                      precision=self._spec.policy.precision)
             return float(jnp.mean(jnp.argmax(logits, -1) == self.y_test))
         return float(self._eval_fn((self.w_c, self.w_s_inv)))

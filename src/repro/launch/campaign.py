@@ -187,7 +187,7 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
                  policy_seed: Optional[int] = None, scan: bool = True,
                  mesh=None, eval_every: Optional[int] = None,
                  eval_gamma: float = 1e-3, strict_transfers: bool = False,
-                 **hyper) -> CampaignResult:
+                 policy=None, **hyper) -> CampaignResult:
     """Train `len(seeds)` independent runs of `framework` in one compiled
     scan-over-rounds, vmapped over the seed axis.
 
@@ -208,7 +208,10 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
     the mesh data axes).  ``strict_transfers=True`` wraps the device phase
     in ``jax.transfer_guard_device_to_host("disallow")``, turning any
     stray per-round pull into a hard error (used by the transfer-counting
-    test).
+    test).  ``policy`` (None / ``"reference"`` / ``"kernel"`` /
+    ``"kernel_bf16"`` / a ``repro.kernels.dispatch.KernelPolicy``) selects
+    the kernel dispatch + precision for every round AND the fused eval, so
+    the whole scanned campaign runs kernelized end-to-end.
     """
     x = jnp.asarray(client_data["x"])
     y = jnp.asarray(client_data["y"])
@@ -228,7 +231,8 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
     # identical to the serial trainers (masked updates are exact no-ops);
     # only SplitMe's *loss metric* differs from the seed quirk of averaging
     # over the full E_max scan.
-    spec = engine.make_spec(framework, cfg, masked_loss_metric=True, **hyper)
+    spec = engine.make_spec(framework, cfg, masked_loss_metric=True,
+                            policy=policy, **hyper)
     comm, nsel, sim, cost = _schedule_system_metrics(spec, sched, sp)
 
     if mesh is not None:
@@ -252,7 +256,7 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
         if test_data is not None:
             result.accuracy = evaluate_campaign(
                 result, cfg, test_data, client_data=client_data,
-                gamma=eval_gamma)
+                gamma=eval_gamma, policy=spec.policy)
         return result
 
     eval_fn = None
@@ -447,7 +451,8 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
 
 
 def evaluate_campaign(result: CampaignResult, cfg: DNNConfig, test_data,
-                      client_data=None, gamma: float = 1e-3) -> np.ndarray:
+                      client_data=None, gamma: float = 1e-3,
+                      policy=None) -> np.ndarray:
     """Per-seed test accuracy of a finished campaign (post-hoc; the scanned
     campaign fuses the same jitted evaluation into its round scan).
 
@@ -455,8 +460,8 @@ def evaluate_campaign(result: CampaignResult, cfg: DNNConfig, test_data,
     first recovers each seed's server model via the one-shot analytic
     inversion (Step 4), which needs the client data for the Gram sums.
     Both paths are the engine's jitted ``build_eval_fn``, vmapped over the
-    seed axis."""
-    spec = engine.make_spec(result.framework, cfg)
+    seed axis; ``policy`` selects kernels/precision for them."""
+    spec = engine.make_spec(result.framework, cfg, policy=policy)
     if result.framework == "splitme" and client_data is None:
         raise ValueError("splitme evaluation needs client_data for Step 4")
     eval_fn = engine.build_eval_fn(
@@ -474,7 +479,7 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
                      policy_seed: Optional[int] = None,
                      eval_gamma: float = 1e-3,
                      eval_every: Optional[int] = None, mesh=None,
-                     strict_transfers: bool = False,
+                     strict_transfers: bool = False, policy=None,
                      **hyper) -> List[CampaignResult]:
     """Multi-config campaign over SystemParams variants.
 
@@ -493,7 +498,7 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
                              e_initial=e_initial, policy_seed=policy_seed,
                              eval_gamma=eval_gamma, eval_every=eval_every,
                              mesh=mesh, strict_transfers=strict_transfers,
-                             **hyper)
+                             policy=policy, **hyper)
                 for sp in system_params]
     if mesh is not None:
         raise ValueError("mesh (sharded rounds) requires vmap_configs=False")
@@ -518,7 +523,8 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
     e_all = np.stack([sch.E for sch in scheds]).astype(np.int32)    # (V,R)
     e_max = max(1, int(e_all.max()))
 
-    spec = engine.make_spec(framework, cfg, masked_loss_metric=True, **hyper)
+    spec = engine.make_spec(framework, cfg, masked_loss_metric=True,
+                            policy=policy, **hyper)
     raw = engine.build_round_fn(spec, cfg, x, y, e_max=e_max, jit=False,
                                 gather=False)
     eval_fn = None

@@ -1,0 +1,52 @@
+"""Serial trainers buffer device-array metrics (no per-round float() sync);
+``fetch_history`` resolves them host-side in one transfer at campaign end.
+``interactive=True`` restores the seed behavior (plain floats per round)."""
+import jax
+import numpy as np
+
+from repro.configs.splitme_dnn import DNN10
+from repro.core.baselines import FedAvgTrainer
+from repro.core.cost import SystemParams
+from repro.core.splitme import SplitMeTrainer
+
+
+def _small_data():
+    from repro.data import oran
+    X, y = oran.generate(n_per_class=200, seed=0)
+    (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
+    cd = oran.partition_non_iid(Xtr, ytr, 12, samples_per_client=32, seed=0)
+    return cd, (Xte, yte)
+
+
+def test_async_metrics_fetch_once():
+    cd, test = _small_data()
+    tr = SplitMeTrainer(DNN10, SystemParams(M=12, seed=0), cd, test, seed=0)
+    for k in range(3):
+        m = tr.run_round(eval_acc=(k == 2))
+        # device arrays, not python floats — the round loop never blocks
+        assert isinstance(m.client_loss, jax.Array)
+        assert isinstance(m.server_loss, jax.Array)
+    assert isinstance(tr.history[2].accuracy, jax.Array)
+    hist = tr.fetch_history()
+    assert hist is tr.history
+    for m in hist:
+        assert isinstance(m.client_loss, float)
+        assert isinstance(m.server_loss, float)
+        assert isinstance(m.accuracy, float)
+        assert np.isfinite(m.client_loss)
+    assert np.isfinite(hist[2].accuracy)
+    assert np.isnan(hist[0].accuracy)          # no eval that round
+
+
+def test_interactive_escape_hatch_matches_async():
+    cd, test = _small_data()
+    a = FedAvgTrainer(DNN10, SystemParams(M=12, seed=0), cd, test, K=4, E=5,
+                      seed=0)
+    b = FedAvgTrainer(DNN10, SystemParams(M=12, seed=0), cd, test, K=4, E=5,
+                      seed=0, interactive=True)
+    la = [a.run_round().client_loss for _ in range(2)]
+    lb = [b.run_round().client_loss for _ in range(2)]
+    assert all(isinstance(l, float) for l in lb)   # interactive: floats now
+    a.fetch_history()
+    np.testing.assert_allclose([m.client_loss for m in a.history], lb,
+                               rtol=0, atol=0)

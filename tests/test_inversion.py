@@ -74,8 +74,10 @@ def test_inversion_allreduce_equivalence():
     # shard over a 4-way client mesh axis via shard_map-style vmap+psum:
     # here we emulate by computing the same quantity from stacked shards.
     from repro.core.inversion import _augment, _gram
+    from repro.kernels import dispatch
     o = jnp.concatenate(xs)
-    a0_sum = sum(_gram(_augment(x), _augment(x), False)[0] for x in xs)
-    a0_all = _gram(_augment(o), _augment(o), False)[0]
+    pol = dispatch.get_policy("reference")
+    a0_sum = sum(_gram(_augment(x), _augment(x), pol)[0] for x in xs)
+    a0_all = _gram(_augment(o), _augment(o), pol)[0]
     np.testing.assert_allclose(a0_sum, a0_all, rtol=1e-4, atol=1e-3)
     assert len(w_all) == len(cfg.layer_dims) - 1 - cfg.split_index
