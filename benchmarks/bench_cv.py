@@ -15,7 +15,7 @@ from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import Row, time_fn
+from benchmarks.common import time_fn
 from repro.configs.splitme_dnn import DNNConfig
 from repro.core.cost import SystemParams
 from repro.core.splitme import SplitMeTrainer

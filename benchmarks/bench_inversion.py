@@ -7,14 +7,10 @@ extra communication round SplitMe pays at the end.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import Row, time_fn
 from repro.configs.splitme_dnn import DNN10
-from repro.core import dnn
 from repro.core.cost import SystemParams
-from repro.core.inversion import invert_inverse_model
 from repro.core.splitme import SplitMeTrainer
 from repro.data import oran
 

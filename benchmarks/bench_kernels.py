@@ -4,7 +4,6 @@ the workload size)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import Row, time_fn
 

@@ -1,12 +1,25 @@
 """End-to-end O-RAN SplitFL campaign — the paper's full experiment.
 
     PYTHONPATH=src python examples/oran_splitfl_campaign.py [--rounds 30]
-        [--baselines] [--ckpt-dir /tmp/splitme] [--seeds 4]
+        [--baselines] [--ckpt-dir /tmp/splitme] [--seeds 4] [--quant bf16]
 
 Trains SplitMe to convergence on the COMMAG-style slice data (30 rounds, as
 in §V-B), checkpoints (w_C, w_S⁻¹) every 10 rounds, performs the final
-analytic inversion, and (optionally) runs the three baselines for the same
-wall-clock comparison the paper plots in Fig. 4.
+analytic inversion, and (optionally) runs the baseline frameworks for the
+same wall-clock comparison the paper plots in Fig. 4.
+
+The framework registry (``repro.core.engine``) holds SIX frameworks: the
+paper's four — splitme, fedavg, sfl, oranfed — plus two resource-allocation
+baselines from the related work, fedora (arXiv 2505.19211: RIC
+deadline-feasible cohort allocation) and ecofl (arXiv 2507.21698:
+energy-first selection).  ``--baselines`` runs all five non-SplitMe
+frameworks.
+
+``--quant {none,bf16,int8}`` selects the CommQuant wire format of the
+masked-FedAvg aggregation payload: bf16 halves and int8 quarters every
+upload (int8 adds stochastic rounding with an f32 error-feedback
+accumulator), and comm volume, latency, cost and the deadline/energy
+selection policies all account the narrower format.
 
 With ``--seeds N`` (N > 1) the run goes through the scanned multi-seed
 campaign runner instead: N independent seeds train through one compiled
@@ -24,14 +37,21 @@ import numpy as np
 
 from repro.checkpoint import io as ckpt
 from repro.configs.splitme_dnn import DNN10
-from repro.core.baselines import FedAvgTrainer, ORANFedTrainer, SFLTrainer
+from repro.core.baselines import (EcoFLTrainer, FedAvgTrainer, FedORATrainer,
+                                  ORANFedTrainer, SFLTrainer)
 from repro.core.cost import SystemParams
 from repro.core.splitme import SplitMeTrainer
 from repro.data import oran
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="O-RAN SplitFL campaign over the six-framework registry "
+                    "(splitme, fedavg, sfl, oranfed, fedora, ecofl)",
+        epilog="CommQuant: --quant bf16|int8 narrows the aggregation wire "
+               "format (comm volume, latency, cost and deadline/energy "
+               "selection all respond); int8 uses stochastic rounding with "
+               "an f32 error-feedback accumulator.")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--baseline-rounds", type=int, default=60)
     ap.add_argument("--baselines", action="store_true")
@@ -48,6 +68,13 @@ def main():
                     help="kernel dispatch / precision policy (default: "
                          "auto by backend — Pallas kernels on TPU, "
                          "reference jnp on CPU)")
+    ap.add_argument("--quant", default=None,
+                    choices=["none", "bf16", "int8"],
+                    help="CommQuant wire format of the masked-FedAvg "
+                         "aggregation payload (default none/f32; bf16 = "
+                         "deterministic 16-bit rounding, int8 = stochastic "
+                         "rounding + f32 error feedback; comm_bits/latency/"
+                         "cost and the selection policies account it)")
     args = ap.parse_args()
 
     X, y = oran.generate(n_per_class=2000, seed=0)
@@ -64,6 +91,8 @@ def main():
                 ("fedavg", {"K": 10, "E": 10}),
                 ("sfl", {"K": 20, "E": 14}),
                 ("oranfed", {"E": 10}),
+                ("fedora", {"E": 10}),
+                ("ecofl", {"K": 10, "E": 10}),
         ] if args.baselines else []):
             rounds = args.rounds if name == "splitme" else args.baseline_rounds
             t0 = time.time()
@@ -71,7 +100,8 @@ def main():
                                         clients, rounds=rounds, seeds=seeds,
                                         test_data=(Xte, yte),
                                         eval_every=args.eval_every,
-                                        policy=args.policy, **kw)
+                                        policy=args.policy,
+                                        quant=args.quant, **kw)
             acc = res.accuracy
             print(f"[{name}] {len(seeds)} seeds x {rounds} rounds: "
                   f"acc={acc.mean():.3f}±{acc.std():.3f} "
@@ -86,7 +116,8 @@ def main():
         return
 
     tr = SplitMeTrainer(DNN10, sp, clients, (Xte, yte), seed=0,
-                        kernel_policy=args.policy, interactive=True)
+                        kernel_policy=args.policy, comm_quant=args.quant,
+                        interactive=True)
     t0 = time.time()
     for k in range(args.rounds):
         m = tr.run_round(eval_acc=(k % 5 == 4))
@@ -109,9 +140,11 @@ def main():
             ("fedavg", FedAvgTrainer, {"K": 10, "E": 10}),
             ("sfl", SFLTrainer, {"K": 20, "E": 14}),
             ("oranfed", ORANFedTrainer, {"E": 10}),
+            ("fedora", FedORATrainer, {"E": 10}),
+            ("ecofl", EcoFLTrainer, {"K": 10, "E": 10}),
         ]:
             b = cls(DNN10, SystemParams(seed=0), copy.deepcopy(clients),
-                    (Xte, yte), **kw)
+                    (Xte, yte), comm_quant=args.quant, **kw)
             for _ in range(args.baseline_rounds):
                 b.run_round()
             print(f"[{name}] acc={b.evaluate():.3f} "

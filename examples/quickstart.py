@@ -7,8 +7,6 @@ Runs 10 global rounds of the full pipeline — deadline-aware selection
 the final analytic inversion (Step 4) — then prints the combined model's
 test accuracy.
 """
-import numpy as np
-
 from repro.configs.splitme_dnn import DNN10
 from repro.core.cost import SystemParams
 from repro.core.splitme import SplitMeTrainer

@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""Bench regression gate: compare a fresh --fast FL bench against the
+committed baseline and fail CI on a real slowdown.
+
+    python scripts/check_bench_regression.py \
+        --baseline /tmp/bench_baseline.json --fresh BENCH_fl.json \
+        [--tolerance 0.30] [--mode reference]
+
+``scripts/ci.sh`` snapshots the committed ``BENCH_fl.json`` BEFORE the
+bench stage rewrites it, then runs this as the final stage.  The gate
+metric is the ``reference`` round-policy mode's ``rounds_per_sec`` — the
+pure-jnp f32 path every backend runs — with a tolerance band (default
+30%) absorbing runner noise; the other modes are reported informationally
+(on CPU they resolve to the same compiled program as reference, so their
+deltas show the estimator's noise floor).  ``steps_per_sec`` is printed
+alongside because it normalizes the adaptive schedule away.
+
+Absolute throughput is machine-specific, so the HARD gate only applies
+when the baseline's ``env`` fingerprint (platform / machine / cpu_count /
+backend, written by the bench) matches the fresh run's — a baseline
+committed from a dev box reports informationally on a different CI
+runner instead of failing it.  Same-environment reruns (the common CI
+case once a runner-produced baseline is committed, and every local
+pre-commit run) get the real gate.  ``--force-gate`` overrides the
+fingerprint check.
+
+Missing/malformed baselines PASS with a warning: the first run on a new
+branch (or a baseline predating the current JSON schema) must not brick
+CI — committing the freshly written ``BENCH_fl.json`` re-arms the gate.
+
+Exit status: 0 = ok / skipped / informational, 1 = regression beyond
+tolerance.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load_bench(path: Path, label: str):
+    if not path.exists():
+        print(f"[bench-gate] {label} {path} missing -> SKIP (pass)")
+        return None
+    try:
+        data = json.loads(path.read_text())
+        modes = data["modes"]
+        assert isinstance(modes, dict) and modes
+        return data
+    except Exception as e:  # malformed baseline must not brick CI
+        print(f"[bench-gate] {label} {path} unreadable ({e}) -> SKIP (pass)")
+        return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True, type=Path,
+                    help="committed BENCH_fl.json snapshot")
+    ap.add_argument("--fresh", required=True, type=Path,
+                    help="BENCH_fl.json written by the fast bench just now")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional rounds/sec drop in --mode "
+                         "(default 0.30)")
+    ap.add_argument("--mode", default="reference",
+                    help="round-policy mode the gate applies to")
+    ap.add_argument("--force-gate", action="store_true",
+                    help="hard-gate even when the env fingerprints differ")
+    args = ap.parse_args()
+
+    base_data = load_bench(args.baseline, "baseline")
+    fresh_data = load_bench(args.fresh, "fresh")
+    if base_data is None or fresh_data is None:
+        return 0
+    base, fresh = base_data["modes"], fresh_data["modes"]
+
+    base_env = base_data.get("env")
+    fresh_env = fresh_data.get("env")
+    same_env = base_env is not None and base_env == fresh_env
+    gate_armed = same_env or args.force_gate
+    if not gate_armed:
+        print(f"[bench-gate] env fingerprint mismatch (baseline "
+              f"{base_env} vs fresh {fresh_env}) -> comparison is "
+              f"INFORMATIONAL; commit the freshly written BENCH_fl.json "
+              f"from this environment to arm the gate "
+              f"(--force-gate overrides)")
+
+    failed = False
+    print(f"[bench-gate] tolerance {args.tolerance:.0%} on "
+          f"mode={args.mode!r} rounds_per_sec"
+          f"{' [armed]' if gate_armed else ' [informational]'}")
+    print(f"{'mode':<14} {'base r/s':>10} {'fresh r/s':>10} {'delta':>8}  "
+          f"{'base st/s':>10} {'fresh st/s':>10}")
+    for mode in sorted(set(base) | set(fresh)):
+        b, f = base.get(mode), fresh.get(mode)
+        if not (b and f):
+            print(f"{mode:<14} {'-':>10} {'-':>10}     (mode only in one "
+                  f"file; informational)")
+            continue
+        br, fr = b.get("rounds_per_sec", 0.0), f.get("rounds_per_sec", 0.0)
+        bs, fs = b.get("steps_per_sec", 0.0), f.get("steps_per_sec", 0.0)
+        delta = (fr - br) / br if br else 0.0
+        gate = gate_armed and mode == args.mode
+        verdict = ""
+        if gate and br and delta < -args.tolerance:
+            failed = True
+            verdict = "  << REGRESSION"
+        print(f"{mode:<14} {br:>10.3f} {fr:>10.3f} {delta:>+7.1%} "
+              f"{bs:>10.0f} {fs:>10.0f}{verdict}")
+    if failed:
+        print(f"[bench-gate] FAIL: {args.mode} rounds/sec dropped more than "
+              f"{args.tolerance:.0%} vs the committed baseline.  If the "
+              f"slowdown is intended, refresh BENCH_fl.json "
+              f"(python -m benchmarks.run --fast --only fl_frameworks) and "
+              f"commit it with the change.")
+        return 1
+    print("[bench-gate] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

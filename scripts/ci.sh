@@ -1,13 +1,32 @@
 #!/usr/bin/env sh
-# Fast CI smoke: the non-slow test suite plus the FL-framework perf bench
-# in --fast mode, so the perf artifacts in benchmarks/results/ stay
-# reproducible on every change.
+# CI pipeline (also runnable locally):
+#   1. ruff lint (+ format drift report)    — style failures fail fast
+#   2. non-slow, non-kernel test suite
+#   3. kernel parity under the Pallas interpreter
+#   4. fast FL-framework bench              — refreshes BENCH_fl.json +
+#                                             benchmarks/results/
+#   5. bench regression gate                — fresh --fast rounds/sec vs the
+#                                             committed BENCH_fl.json
 #
 #     sh scripts/ci.sh
+#
+# .github/workflows/ci.yml runs this on push/PR with a matrix over
+# REPRO_PALLAS_INTERPRET={0,1} and uploads the bench artifacts.
 set -eu
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== ruff lint =="
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+    # format drift is informational until the tree is ruff-format-adopted;
+    # the lint gate above is what fails the stage
+    ruff format --check . || echo "ruff format: drift (informational)"
+else
+    echo "ruff not installed; skipping lint stage" \
+         "(pip install -r requirements-dev.txt)"
+fi
 
 echo "== pytest -m 'not slow and not kernels' =="
 python -m pytest -q -m "not slow and not kernels"
@@ -16,4 +35,15 @@ echo "== kernel parity (Pallas interpret mode) =="
 REPRO_PALLAS_INTERPRET=1 python -m pytest -q -m kernels
 
 echo "== benchmarks (fast, fl_frameworks) =="
+# snapshot the committed bench BEFORE the run rewrites BENCH_fl.json
+# (rm first: a stale snapshot from another checkout must not arm the gate
+# against unrelated numbers when BENCH_fl.json is absent here)
+BASELINE="${TMPDIR:-/tmp}/bench_fl_baseline.json"
+rm -f "$BASELINE"
+cp BENCH_fl.json "$BASELINE" 2>/dev/null || true
 python -m benchmarks.run --fast --only fl_frameworks
+
+echo "== bench regression gate =="
+python scripts/check_bench_regression.py \
+    --baseline "$BASELINE" --fresh BENCH_fl.json \
+    --tolerance "${BENCH_TOLERANCE:-0.30}" --mode reference

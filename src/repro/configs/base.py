@@ -9,8 +9,8 @@ the dry-run.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 # ---------------------------------------------------------------------------
 # Input shapes assigned to this paper (see the brief).

@@ -4,7 +4,7 @@ Paper §V-A: a ten-layer DNN (as in [38]) solves slice traffic classification
 (eMBB / mMTC / URLLC). 20% of layers (two) stay on the near-RT-RIC (client),
 the rest go to the non-RT-RIC (server): split_index = 2, ω = 1/5.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 from repro.configs.base import register, ArchConfig

@@ -23,7 +23,7 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.core.cost import SystemParams, k_eps, objective
+from repro.core.cost import SystemParams, objective
 
 
 def solve_bandwidth(a: np.ndarray, E: int, sp: SystemParams) -> np.ndarray:

@@ -1,4 +1,6 @@
-"""Baseline FL frameworks the paper compares against (§V-A):
+"""Baseline FL frameworks the paper compares against (§V-A), plus the two
+resource-allocation baselines from PAPERS.md the registry grew beyond the
+paper:
 
 * **FedAvg** [6]      — K=10 fixed clients, E=10, full-model local training,
                         no splitting, no system optimization.
@@ -7,8 +9,15 @@
                         eliminates); client/server copies FedAvg-aggregated.
 * **O-RANFed** [8]    — FedAvg + deadline-aware selection + bandwidth
                         allocation (system optimization, no splitting).
+* **FedORA** (arXiv 2505.19211) — full-model FL; the RIC admits the largest
+                        fastest-first cohort whose exact min-max bandwidth
+                        allocation meets every admitted client's slice
+                        deadline.
+* **EcoFL** (arXiv 2507.21698) — full-model FL; energy-first selection (the
+                        K lowest-energy clients) with min-max bandwidth;
+                        per-round energy via ``repro.core.cost.round_energy``.
 
-All three run on the same non-IID O-RAN slice data and report the same
+All of them run on the same non-IID O-RAN slice data and report the same
 metrics (selected trainers, comm volume, simulated latency, cost, accuracy)
 so benchmarks/ can reproduce the paper's figures.
 
@@ -16,6 +25,9 @@ The local-training hot path is the unified engine (``repro.core.engine``);
 each class here only names its framework spec and selection policy.  Every
 trainer derives omega/S_m/Q_* on a private SystemParams copy, so sequential
 framework runs sharing one SystemParams no longer corrupt each other.
+``comm_quant`` (None / "bf16" / "int8" / ``CommQuant``) narrows the wire
+format of the aggregation payload; comm volume, latency, cost and the
+deadline/energy selection policies all account the quantized bits.
 """
 from __future__ import annotations
 
@@ -37,7 +49,8 @@ class _FLBase:
 
     def __init__(self, cfg: DNNConfig, sp: SystemParams, client_data,
                  test_data, lr: float, E: int, batch_size: int, seed: int,
-                 K: int = 10, kernel_policy=None, interactive: bool = False):
+                 K: int = 10, kernel_policy=None, comm_quant=None,
+                 interactive: bool = False):
         self.cfg, self.E = cfg, E
         self.x = jnp.asarray(client_data["x"])
         self.y = jnp.asarray(client_data["y"])
@@ -47,15 +60,17 @@ class _FLBase:
         # dispatch (fetch_history() syncs once at campaign end)
         self.interactive = interactive
         self.sp, self.policy = engine.make_policy(
-            self.framework, sp, cfg, seed=seed, K=K, E=E)
+            self.framework, sp, cfg, seed=seed, K=K, E=E, quant=comm_quant)
         self.key = jax.random.PRNGKey(seed)
         self._spec = engine.make_spec(self.framework, cfg, lr=lr,
                                       batch_size=batch_size,
-                                      policy=kernel_policy)
+                                      policy=kernel_policy, quant=comm_quant)
         (self.params,) = self._spec.init_fn(
             jax.random.PRNGKey(seed + self._spec.init_key_offset))
         self.history: List[RoundMetrics] = []
         self._round = 0
+        # CommQuant error-feedback accumulator (empty when stateless)
+        self._qstate = engine.init_quant_state(self._spec, (self.params,))
         # fixed E → exact-length scan (mask is all-ones, compiled once)
         self._round_fn = engine.build_round_fn(self._spec, cfg, self.x,
                                                self.y, e_max=E)
@@ -66,9 +81,9 @@ class _FLBase:
     def run_round(self, eval_acc: bool = False) -> RoundMetrics:
         a, b, self.E = self.policy.step()
         self.key, sub = jax.random.split(self.key)
-        (self.params,), (loss,) = self._round_fn(
+        (self.params,), (loss,), self._qstate = self._round_fn(
             (self.params,), jnp.asarray(a, jnp.float32),
-            jnp.asarray(self.E), sub)
+            jnp.asarray(self.E), sub, self._qstate)
         return self._record(a, b, eval_acc,
                             float(loss) if self.interactive else loss)
 
@@ -137,3 +152,30 @@ class ORANFedTrainer(_FLBase):
                  **kw):
         super().__init__(cfg, sp, client_data, test_data, lr, E, batch_size,
                          seed, **kw)
+
+
+class FedORATrainer(_FLBase):
+    """FedORA (arXiv 2505.19211): full-model FL, cohort set per round by
+    the RIC's deadline-feasible min-max resource allocation."""
+
+    framework = "fedora"
+
+    def __init__(self, cfg, sp, client_data, test_data, *, E: int = 10,
+                 lr: float = 0.05, batch_size: int = 32, seed: int = 0,
+                 **kw):
+        super().__init__(cfg, sp, client_data, test_data, lr, E, batch_size,
+                         seed, **kw)
+
+
+class EcoFLTrainer(_FLBase):
+    """EcoFL (arXiv 2507.21698): full-model FL, the K lowest-energy clients
+    per round (transmit + compute power), min-max bandwidth over them."""
+
+    framework = "ecofl"
+
+    def __init__(self, cfg, sp, client_data, test_data, *, K: int = 10,
+                 E: int = 10, lr: float = 0.05, batch_size: int = 32,
+                 seed: int = 0, **kw):
+        super().__init__(cfg, sp, client_data, test_data, lr, E, batch_size,
+                         seed, K=K, **kw)
+        self.K = K

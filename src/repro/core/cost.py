@@ -6,7 +6,6 @@ K_ε(E) · cost(t) with K_ε from Corollary 4.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 import numpy as np
 
@@ -31,6 +30,9 @@ class SystemParams:
     t_round: np.ndarray = field(default=None, repr=False)  # U(50,100) ms
     S_m: np.ndarray = field(default=None, repr=False)      # smashed bytes/client
     d_model_bits: float = 8e6          # entire-model size in bits
+    # EcoFL-style per-client energy accounting (radio + CPU draw)
+    p_tx_w: float = 0.2                # uplink transmit power (W)
+    p_cpu_w: float = 5.0               # local-training compute power (W)
 
     def __post_init__(self):
         rng = np.random.default_rng(self.seed)
@@ -100,3 +102,14 @@ def round_cost(a: np.ndarray, b: np.ndarray, E: int, sp: SystemParams) -> float:
 def objective(a: np.ndarray, b: np.ndarray, E: int, sp: SystemParams) -> float:
     """eq. 22: K_ε · cost(t)."""
     return k_eps(E, sp.eps) * round_cost(a, b, E, sp)
+
+
+def round_energy(a: np.ndarray, b: np.ndarray, E: int,
+                 sp: SystemParams) -> float:
+    """EcoFL-style per-round energy (J) of the selected set: transmit
+    power over the realized uplink time plus CPU power over the E local
+    updates.  Responds to the CommQuant wire format through the quantized
+    S_m / d_model_bits inside ``uplink_time``."""
+    t_up = uplink_time(a, b, sp)
+    return float(np.sum(a * (sp.p_tx_w * t_up
+                             + sp.p_cpu_w * E * (sp.Q_C + sp.Q_S))))

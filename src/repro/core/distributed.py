@@ -30,7 +30,8 @@ from repro.core.engine import client_axes as _client_axes  # re-export
 def make_splitme_round(cfg: DNNConfig, mesh: Mesh, *, n_clients: int,
                        samples_per_client: int, E: int, batch: int = 32,
                        lr_c: float = 0.05, lr_s: float = 0.02,
-                       temperature: float = 2.0, unroll_steps: bool = False):
+                       temperature: float = 2.0, unroll_steps: bool = False,
+                       quant=None):
     """One SplitMe global round under shard_map, clients sharded over the
     mesh data axes — engine-backed.
 
@@ -38,20 +39,29 @@ def make_splitme_round(cfg: DNNConfig, mesh: Mesh, *, n_clients: int,
     training ALL clients (the dry-run cohort).  E local steps on both sides
     run with ZERO cross-client traffic; the only collective is the per-round
     FedAvg ``psum`` — the paper's "one communication per round".
+
+    ``quant`` selects the ``CommQuant`` wire format of that psum (the
+    fl_dryrun lowering counts the quantized payload).  This adapter keeps
+    the old 5-argument signature, so the int8 error-feedback accumulator
+    is re-zeroed per call — fine for single-round lowering/dry-runs; use
+    the engine builder directly to carry it across rounds.
     """
     del samples_per_client  # shapes come from the data argument
     spec = engine.make_spec("splitme", cfg, lr_c=lr_c, lr_s=lr_s,
                             temperature=temperature, batch_size=batch,
-                            masked_loss_metric=True)
+                            masked_loss_metric=True, quant=quant)
     rf = engine.build_sharded_round_fn(spec, cfg, mesh, n_clients=n_clients,
                                        e_max=E, jit=False,
                                        unroll_steps=unroll_steps)
+    n_shards = engine.n_client_shards(mesh)
 
     def round_fn(w_c, w_s_inv, x, y1, key):
         y = jnp.argmax(y1, -1).astype(jnp.int32)
         a_mask = jnp.ones((n_clients,), jnp.float32)
-        (w_c2, w_s2), _ = rf((w_c, w_s_inv), x, y, a_mask,
-                             jnp.asarray(E, jnp.int32), key)
+        qstate = engine.init_quant_state(spec, (w_c, w_s_inv),
+                                         n_shards=n_shards)
+        (w_c2, w_s2), _, _ = rf((w_c, w_s_inv), x, y, a_mask,
+                                jnp.asarray(E, jnp.int32), key, qstate)
         return w_c2, w_s2
 
     return round_fn

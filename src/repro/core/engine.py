@@ -1,6 +1,7 @@
-"""Unified federated round engine for the paper's four §V frameworks —
-single-device, sharded (shard_map), and scanned execution from ONE round
-core.
+"""Unified federated round engine for the framework registry — the
+paper's four §V frameworks plus the FedORA / EcoFL resource-allocation
+baselines — single-device, sharded (shard_map), and scanned execution
+from ONE round core.
 
 A framework contributes only what actually differs, as a ``FrameworkSpec``:
 
@@ -49,6 +50,15 @@ and the Step-4 Gram products dispatch to the Pallas kernels per the policy
 casts the forwards to bf16 activations with f32 accumulators/master params
 — loss reductions and the masked aggregation stay f32.
 
+The WIRE format of the aggregation is a second, independent knob: a
+``repro.core.quantcomm.CommQuant`` bound at ``make_spec(quant=...)`` time
+narrows the masked-FedAvg payload to bf16 or int8 (stochastic rounding +
+f32 error feedback, threaded through the round functions as ``qstate``)
+at the quantize-before-psum point, preserving the one-all-reduce-per-round
+invariant; ``make_policy(quant=...)`` scales the derived SystemParams so
+comm volume, latency, cost and deadline/energy selection all count the
+quantized bits.
+
 ``make_policy`` also prepares a private copy of the caller's
 ``SystemParams`` — the seed trainers mutated the shared instance in place,
 which silently corrupted sequential framework runs; the engine never writes
@@ -71,10 +81,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import dnn
+from repro.core import dnn, quantcomm
 from repro.core.allocation import solve_bandwidth, solve_p2
-from repro.core.cost import SystemParams
+from repro.core.cost import SystemParams, uplink_time
 from repro.core.inversion import invert_inverse_model
+from repro.core.quantcomm import CommQuant
 from repro.core.selection import (SelectionState, initial_state,
                                   select_trainers, update_state)
 from repro.kernels import dispatch
@@ -82,6 +93,11 @@ from repro.kernels.dispatch import KernelPolicy
 
 Params = Any                     # pytree of arrays
 ParamsTuple = Tuple[Params, ...]
+
+# fold_in salt deriving the quantization RNG stream from the round key
+# WITHOUT advancing the per-client split chain (quant=none numerics stay
+# byte-identical to the pre-quantcomm engine)
+_QSALT = 0x5157
 
 
 @dataclass
@@ -153,6 +169,11 @@ class FrameworkSpec:
     # built with (``make_spec`` binds it; the builders and ``build_eval_fn``
     # read it so one spec means one numerics everywhere).
     policy: Optional[KernelPolicy] = None
+    # Wire format of the masked-FedAvg aggregation payload
+    # (quantize-before-psum / dequantize-after inside the round core; the
+    # comm models count the quantized bits via the make_policy-scaled
+    # SystemParams).
+    quant: CommQuant = quantcomm.NONE
 
 
 # ---------------------------------------------------------------------------
@@ -165,23 +186,42 @@ def client_axes(mesh) -> Tuple[str, ...]:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
+def n_client_shards(mesh) -> int:
+    """Number of client shards on `mesh` — the leading-axis length of the
+    per-shard CommQuant error-feedback state (``init_quant_state``'s
+    ``n_shards``), shared by every caller that sizes that state."""
+    return int(np.prod([mesh.shape[a] for a in client_axes(mesh)]))
+
+
 def replicate(params: Params, m: int) -> Params:
     """Broadcast global params onto the client axis (no copy until donated)."""
     return jax.tree.map(lambda p: jnp.broadcast_to(p, (m,) + p.shape), params)
 
 
-def psum_bundle(tree, axis_names):
+def psum_bundle(tree, axis_names, wire_dtype=None):
     """psum a whole pytree as ONE all-reduce: ravel + concatenate the
     leaves, cross the mesh once, split back.  ``jax.lax.psum`` on a pytree
     emits one all-reduce per leaf and not every backend re-combines them;
     bundling makes "one communication per round" a structural property of
     the lowered HLO (fl_dryrun counts it).  Elementwise sums are unchanged,
-    so this is numerically exact."""
+    so this is numerically exact.
+
+    ``wire_dtype`` narrows the wire format (the bf16 ``CommQuant`` mode):
+    the bundled vector is rounded to that dtype before the all-reduce and
+    widened back after — still exactly one collective.  (XLA's CPU passes
+    promote narrow all-reduces back to f32 in the lowered HLO, so comm
+    accounting counts ``CommQuant.wire_bits`` analytically rather than
+    trusting the HLO byte widths; see ``repro.launch.fl_dryrun``.)"""
     flat, treedef = jax.tree.flatten(tree)
     sizes = [l.size for l in flat]
     vec = jnp.concatenate([l.ravel() for l in flat]) if len(flat) > 1 \
         else flat[0].ravel()
-    vec = jax.lax.psum(vec, axis_names)
+    if wire_dtype is not None:
+        out_dtype = vec.dtype
+        vec = jax.lax.psum(vec.astype(wire_dtype), axis_names) \
+            .astype(out_dtype)
+    else:
+        vec = jax.lax.psum(vec, axis_names)
     parts = jnp.split(vec, list(np.cumsum(sizes[:-1])))
     return jax.tree.unflatten(
         treedef, [p.reshape(l.shape) for p, l in zip(parts, flat)])
@@ -226,11 +266,17 @@ def _phase_runner(phase: PhaseSpec, n: int, batch_size: int, e_max: int,
 
 
 def _round_core(spec: FrameworkSpec, runners, params: ParamsTuple, ctx_c,
-                a_mask, e_steps, keys,
+                a_mask, e_steps, keys, qstate=(), qkey=None,
                 axis_names: Optional[Tuple[str, ...]] = None):
     """One masked round over a client cohort (the full M axis, a gathered
     cohort, or one device's shard — ``axis_names`` turns the aggregation
-    sums into cross-shard psums)."""
+    sums into cross-shard psums).
+
+    ``spec.quant`` narrows the wire format of the aggregation payload at
+    the point where it would cross the mesh: int8 stochastically rounds
+    the partial masked-FedAvg sums (error feedback carried in ``qstate``)
+    BEFORE the psum, bf16 narrows the bundled all-reduce itself — either
+    way the round still performs exactly one collective."""
     m = ctx_c["x"].shape[0]                 # (local) client-cohort axis
     updated: Dict[int, Params] = {}
     phase_losses = []
@@ -248,16 +294,47 @@ def _round_core(spec: FrameworkSpec, runners, params: ParamsTuple, ctx_c,
                 for i, u in updated.items()}
     msum = jnp.sum(a_mask)
     loss_sums = tuple(jnp.sum(l * a_mask) for l in phase_losses)
+    quant = spec.quant
+    if quant.stochastic:
+        weighted, qstate = quantcomm.fake_quant_int8(
+            weighted, qstate, qkey, quant)
     if axis_names is not None:
         weighted, msum, loss_sums = psum_bundle(
-            (weighted, msum, loss_sums), axis_names)
+            (weighted, msum, loss_sums), axis_names,
+            wire_dtype=jnp.bfloat16 if quant.mode == "bf16" else None)
+    elif quant.mode == "bf16":
+        # no psum to carry the narrow format — simulate the identical
+        # rounding so the single-device round matches the sharded wire
+        weighted, msum, loss_sums = quantcomm.simulate_cast(
+            (weighted, msum, loss_sums), jnp.bfloat16)
     wsum = jnp.maximum(msum, 1.0)
     new_params = tuple(
         jax.tree.map(lambda p: p / wsum, weighted[i]) if i in weighted
         else params[i]
         for i in range(len(params)))
     losses = tuple(s / wsum for s in loss_sums)
-    return new_params, losses
+    return new_params, losses, qstate
+
+
+def init_quant_state(spec: FrameworkSpec, params: Params,
+                     n_shards: Optional[int] = None):
+    """Fresh error-feedback accumulator for ``spec``'s quantized rounds:
+    one zero tree per trained param index, matching the aggregation
+    payload's shapes.  ``()`` when the spec's quant mode carries no state
+    (none / bf16 / int8 without error feedback), so callers can thread it
+    unconditionally.
+
+    For the SHARDED round pass ``n_shards``: each device shard keeps its
+    own residual (it quantizes its own partial sums), so every leaf gains
+    a leading shard axis to shard alongside the client data."""
+    if not spec.quant.stateful:
+        return ()
+    state = {ph.param_idx: jax.tree.map(jnp.zeros_like, params[ph.param_idx])
+             for ph in spec.phases}
+    if n_shards is not None:
+        state = jax.tree.map(
+            lambda z: jnp.zeros((n_shards,) + z.shape, z.dtype), state)
+    return state
 
 
 def _spec_policy(spec: FrameworkSpec,
@@ -289,8 +366,11 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
                    policy: Optional[KernelPolicy] = None):
     """Compile one federated round for `spec` over the fixed client dataset.
 
-    Returns ``round_fn(params_tuple, a_mask, e_steps, key) ->
-    (params_tuple, per_phase_losses)``.  ``e_max`` is the static scan
+    Returns ``round_fn(params_tuple, a_mask, e_steps, key, qstate) ->
+    (params_tuple, per_phase_losses, qstate)``.  ``qstate`` is the
+    ``CommQuant`` error-feedback accumulator (``init_quant_state``; the
+    empty tuple whenever the spec's wire format carries no state — thread
+    it through unconditionally).  ``e_max`` is the static scan
     length; ``e_steps`` (traced) masks the tail, so frameworks with adaptive
     E compile once with ``e_max = sp.E_max`` while fixed-E frameworks pass
     ``e_max = E`` for an exact-length scan.  With ``jit=False`` the pure
@@ -298,7 +378,8 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
     runner's whole-training scan).
 
     ``gather=True`` changes the signature to ``round_fn(params, sel_idx,
-    sel_mask, e_steps, key)``: only the gathered client cohort ``sel_idx``
+    sel_mask, e_steps, key, qstate)``: only the gathered client cohort
+    ``sel_idx``
     (a fixed-size, possibly padded index vector; pads carry mask 0) is
     trained.  This is numerically EXACT relative to the full masked round —
     unselected clients contribute nothing to the masked aggregation or the
@@ -326,23 +407,38 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
     n_ph = len(spec.phases)
 
     if gather:
-        def round_fn(params: ParamsTuple, sel_idx, sel_mask, e_steps, key):
+        def round_fn(params: ParamsTuple, sel_idx, sel_mask, e_steps, key,
+                     qstate=()):
             # full per-client key split, gathered: stream m is the same
             # whether or not the other clients are computed
             keys = jax.random.split(key, n_ph * M).reshape(
                 n_ph, M, -1)[:, sel_idx]
+            qkey = _quant_key(spec, key)
             ctx_c = {k: v[sel_idx] for k, v in ctx.items()}
             return _round_core(spec, runners, params, ctx_c, sel_mask,
-                               e_steps, keys)
+                               e_steps, keys, qstate, qkey)
+        donate_args = (0, 5)
     else:
-        def round_fn(params: ParamsTuple, a_mask, e_steps, key):
+        def round_fn(params: ParamsTuple, a_mask, e_steps, key, qstate=()):
             keys = jax.random.split(key, n_ph * M).reshape(n_ph, M, -1)
+            qkey = _quant_key(spec, key)
             return _round_core(spec, runners, params, ctx, a_mask, e_steps,
-                               keys)
+                               keys, qstate, qkey)
+        donate_args = (0, 4)
 
     if not jit:
         return round_fn
-    return jax.jit(round_fn, donate_argnums=(0,) if donate else ())
+    return jax.jit(round_fn, donate_argnums=donate_args if donate else ())
+
+
+def _quant_key(spec: FrameworkSpec, key):
+    """Quantization RNG stream, derived by fold_in so the per-client split
+    chain (and hence quant=none numerics) is untouched.  The trailing
+    fold_in(0) matches shard 0 of the sharded round, so a 1-shard mesh
+    reproduces the single-device quantized round exactly."""
+    if not spec.quant.stochastic:
+        return None
+    return jax.random.fold_in(jax.random.fold_in(key, _QSALT), 0)
 
 
 def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
@@ -352,8 +448,12 @@ def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
     """Compile one federated round for `spec` with the CLIENT AXIS SHARDED
     over the mesh ``data``/``pod`` axes via ``shard_map``.
 
-    Returns ``round_fn(params_tuple, x, y, a_mask, e_steps, key) ->
-    (params_tuple, per_phase_losses)``.  Unlike ``build_round_fn`` the
+    Returns ``round_fn(params_tuple, x, y, a_mask, e_steps, key, qstate)
+    -> (params_tuple, per_phase_losses, qstate)``.  ``qstate`` is the
+    per-shard ``CommQuant`` error-feedback accumulator
+    (``init_quant_state(spec, params, n_shards=...)`` — each shard
+    quantizes its own partial sums, so each keeps its own residual; the
+    empty tuple for stateless wire formats).  Unlike ``build_round_fn`` the
     client dataset is an argument (shard it once with
     ``NamedSharding(mesh, P(client_axes(mesh)))`` and every round reuses the
     placement).  Each device trains only its M/|shards| client slab; the
@@ -383,36 +483,54 @@ def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
 
     pol = _bound_policy(spec, policy)
     axes = client_axes(mesh)
-    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    axis_sizes = [int(mesh.shape[a]) for a in axes]
+    n_shards = n_client_shards(mesh)
     M = n_clients
     if M % n_shards:
         raise ValueError(f"n_clients={M} not divisible by the "
                          f"{n_shards} client shards of mesh axes {axes}")
     n_ph = len(spec.phases)
 
-    def local_round(params, x_s, y_s, a_s, e_steps, keys_s):
+    def shard_index():
+        idx = jax.lax.axis_index(axes[0])
+        for a, size in zip(axes[1:], axis_sizes[1:]):
+            idx = idx * size + jax.lax.axis_index(a)
+        return idx
+
+    def local_round(params, x_s, y_s, a_s, e_steps, keys_s, qstate_s, qkey):
         n = x_s.shape[1]
         runners = [_phase_runner(ph, n, spec.batch_size, e_max, unroll_steps)
                    for ph in spec.phases]
         ctx_c = {"x": x_s, "y": y_s, "y1": jax.nn.one_hot(y_s, cfg.n_classes)}
-        return _round_core(spec, runners, params, ctx_c, a_s, e_steps,
-                           keys_s, axis_names=axes)
+        # strip the shard axis from this shard's EF block; each shard draws
+        # its own quantization stream (fold_in by shard index)
+        qstate = jax.tree.map(lambda l: l[0], qstate_s)
+        if spec.quant.stochastic:
+            qkey = jax.random.fold_in(qkey, shard_index())
+        new_params, losses, qstate = _round_core(
+            spec, runners, params, ctx_c, a_s, e_steps, keys_s, qstate,
+            qkey, axis_names=axes)
+        return new_params, losses, jax.tree.map(lambda l: l[None], qstate)
 
     c_spec = P(axes)
     sharded = shard_map(
         local_round, mesh=mesh,
-        in_specs=(P(), c_spec, c_spec, c_spec, P(), P(None, axes)),
-        out_specs=(P(), P()), check_rep=False)
+        in_specs=(P(), c_spec, c_spec, c_spec, P(), P(None, axes),
+                  c_spec, P()),
+        out_specs=(P(), P(), c_spec), check_rep=False)
 
-    def round_fn(params: ParamsTuple, x, y, a_mask, e_steps, key):
+    def round_fn(params: ParamsTuple, x, y, a_mask, e_steps, key, qstate=()):
         if pol.precision.is_mixed:
             x = x.astype(pol.precision.compute_dtype)
         keys = jax.random.split(key, n_ph * M).reshape(n_ph, M, -1)
-        return sharded(params, x, y, a_mask, e_steps, keys)
+        # the fold_in is dead (DCE'd) unless the spec's wire format is
+        # stochastic; passing it unconditionally keeps one shard_map arity
+        qkey = jax.random.fold_in(key, _QSALT)
+        return sharded(params, x, y, a_mask, e_steps, keys, qstate, qkey)
 
     if not jit:
         return round_fn
-    return jax.jit(round_fn, donate_argnums=(0,) if donate else ())
+    return jax.jit(round_fn, donate_argnums=(0, 6) if donate else ())
 
 
 # ---------------------------------------------------------------------------
@@ -459,17 +577,78 @@ class SplitMeAdaptivePolicy:
         return a, b, self.E
 
 
+class FedORAPolicy:
+    """FedORA (arXiv 2505.19211): the RIC admits trainers by explicit
+    resource allocation — clients are considered fastest-first and admitted
+    while the exact min-max bandwidth allocation keeps EVERY admitted
+    client's realized round time inside its slice deadline.  Unlike
+    O-RANFed's Alg.-1 estimate (an EMA of past uplink maxima) the RIC
+    re-solves the allocation for each candidate set, so admission responds
+    immediately to payload size — including the quantized wire format.
+    Fixed E, deterministic."""
+
+    def __init__(self, sp: SystemParams, E: int):
+        self.sp, self.E = sp, E
+
+    def step(self) -> Tuple[np.ndarray, np.ndarray, int]:
+        sp, E = self.sp, self.E
+        order = np.argsort(E * (sp.Q_C + sp.Q_S), kind="stable")
+        a = np.zeros(sp.M)
+        b = np.zeros(sp.M)
+        for m in order:
+            a[m] = 1.0
+            b_try = solve_bandwidth(a, E, sp)
+            t = E * (sp.Q_C + sp.Q_S) + uplink_time(a, b_try, sp)
+            if np.all((a == 0) | (t <= sp.t_round)):
+                b = b_try
+            else:
+                # admitted sets are nested along the fastest-first order
+                # and feasibility shrinks monotonically with cohort size
+                a[m] = 0.0
+                break
+        if a.sum() == 0:                       # never stall
+            a[order[0]] = 1.0
+            b = solve_bandwidth(a, E, sp)
+        return a, b, self.E
+
+
+class EcoFLPolicy:
+    """EcoFL (arXiv 2507.21698): energy-first selection — the K clients
+    with the lowest estimated per-round energy (transmit power × uplink
+    time under a uniform K-share bandwidth estimate + compute power × the
+    E local updates) — then the exact min-max bandwidth allocation over
+    the selected set.  ``repro.core.cost.round_energy`` accounts the
+    realized energy of the resulting schedule.  Fixed E, deterministic."""
+
+    def __init__(self, sp: SystemParams, K: int, E: int):
+        self.sp, self.K, self.E = sp, K, E
+
+    def step(self) -> Tuple[np.ndarray, np.ndarray, int]:
+        sp = self.sp
+        t_up_est = (sp.S_m + sp.omega * sp.d_model_bits) / (sp.B / self.K)
+        energy = (sp.p_tx_w * t_up_est
+                  + sp.p_cpu_w * self.E * (sp.Q_C + sp.Q_S))
+        a = np.zeros(sp.M)
+        a[np.argsort(energy, kind="stable")[:self.K]] = 1.0
+        b = solve_bandwidth(a, self.E, sp)
+        return a, b, self.E
+
+
 # ---------------------------------------------------------------------------
 # Per-framework SystemParams derivation (on a private copy)
 # ---------------------------------------------------------------------------
 
-def _derive_splitme(sp: SystemParams, cfg: DNNConfig, n_m: int) -> None:
-    """Smashed-data size, split-model bits and omega from the actual DNN."""
+def _derive_splitme(sp: SystemParams, cfg: DNNConfig, n_m: int,
+                    wire_bits: float = 32.0) -> None:
+    """Smashed-data size, split-model bits and omega from the actual DNN.
+    ``wire_bits`` is the CommQuant payload width — the boundary activations
+    (S_m) and the uploaded split-model halves ship in the quantized wire
+    format, so cost/latency and the P2 deadline selection respond to it."""
     d_split = dnn.client_dims(cfg)[-1]
     pc_c = dnn.param_count_dims(dnn.client_dims(cfg))
     pc_i = dnn.param_count_dims(dnn.inverse_server_dims(cfg))
-    sp.S_m = np.full(sp.M, n_m * d_split * 32.0)
-    sp.d_model_bits = 32.0 * (pc_c + pc_i)
+    sp.S_m = np.full(sp.M, n_m * d_split * wire_bits)
+    sp.d_model_bits = wire_bits * (pc_c + pc_i)
     sp.omega = pc_c / (pc_c + pc_i)
 
 
@@ -488,7 +667,9 @@ def _derive_no_offload(sp: SystemParams) -> None:
 
 def make_policy(name: str, sp: SystemParams, cfg: DNNConfig, *,
                 seed: int = 0, K: int = 10, E: int = 10,
-                e_initial: int = 20, n_samples_per_client: Optional[int] = None
+                e_initial: int = 20,
+                n_samples_per_client: Optional[int] = None,
+                quant: "quantcomm.QuantLike" = None
                 ) -> Tuple[SystemParams, Any]:
     """Copy `sp`, apply the framework's parameter derivation to the copy,
     and build its selection/allocation policy.
@@ -497,13 +678,28 @@ def make_policy(name: str, sp: SystemParams, cfg: DNNConfig, *,
     parity tests pin it): SplitMe seeds Alg. 1's pessimistic t_max^0 from
     the caller's generic S_m/omega BEFORE deriving the real sizes, while
     O-RANFed derives first and seeds the estimate from the derived values.
+
+    ``quant`` (the spec's ``CommQuant``) scales every wire payload in the
+    derived copy — S_m and d_model_bits — by ``wire_bits/32``, so the comm
+    models count quantized bits and the latency/cost curves AND the
+    deadline-driven selection policies (Alg. 1, P2, FedORA's RIC
+    allocation, EcoFL's energy ranking) all respond to the narrower
+    format.  ``quant=None``/"none" leaves the copy byte-identical to the
+    pre-quantcomm derivation.
     """
     sp = sp.copy()
+    q = quantcomm.get_quant(quant)
+    wire = float(q.wire_bits)
+    if q.mode != "none":
+        # generic (pre-derivation) payload sizes: sfl keeps these, and
+        # SplitMe's pessimistic t_max^0 estimate reads them
+        sp.S_m = sp.S_m * q.wire_scale
+        sp.d_model_bits = sp.d_model_bits * q.wire_scale
     if name == "splitme":
         if n_samples_per_client is None:
             raise ValueError("splitme needs n_samples_per_client for S_m")
         state = initial_state(sp)
-        _derive_splitme(sp, cfg, n_samples_per_client)
+        _derive_splitme(sp, cfg, n_samples_per_client, wire_bits=wire)
         return sp, SplitMeAdaptivePolicy(sp, state, e_initial)
     if name == "fedavg":
         _derive_full_model(sp)
@@ -513,6 +709,12 @@ def make_policy(name: str, sp: SystemParams, cfg: DNNConfig, *,
     if name == "oranfed":
         _derive_no_offload(sp)
         return sp, DeadlineFixedEPolicy(sp, initial_state(sp), E)
+    if name == "fedora":
+        _derive_full_model(sp)
+        return sp, FedORAPolicy(sp, E)
+    if name == "ecofl":
+        _derive_full_model(sp)
+        return sp, EcoFLPolicy(sp, K, E)
     raise KeyError(f"unknown framework {name!r}; have {framework_names()}")
 
 
@@ -533,7 +735,8 @@ def _ce_step(cfg: DNNConfig, pol: KernelPolicy):
 
 
 def _mlp_spec(name: str, cfg: DNNConfig, comm_model, *, lr: float,
-              batch_size: int, pol: KernelPolicy) -> FrameworkSpec:
+              batch_size: int, pol: KernelPolicy,
+              quant: CommQuant) -> FrameworkSpec:
     phase = PhaseSpec(
         name="local", param_idx=0, lr=lr, loss_fn=_ce_step(cfg, pol),
         data_key="x", target_fn=lambda params, updated, ctx: ctx["y"])
@@ -541,7 +744,7 @@ def _mlp_spec(name: str, cfg: DNNConfig, comm_model, *, lr: float,
         name=name,
         init_fn=lambda key: (dnn.init_mlp(key, cfg.layer_dims),),
         phases=(phase,), comm_model=comm_model, batch_size=batch_size,
-        init_key_offset=1, policy=pol)
+        init_key_offset=1, policy=pol, quant=quant)
 
 
 def _as_float(x: np.ndarray):
@@ -550,40 +753,75 @@ def _as_float(x: np.ndarray):
     return float(x) if x.ndim == 0 else x
 
 
+def _full_model_comm(a, E, sp):
+    """Whole-model upload per selected client (fedavg / oranfed / fedora /
+    ecofl).  ``sp.d_model_bits`` already carries the CommQuant wire scale
+    (``make_policy`` derives it), so quantized campaigns count quantized
+    bits with no extra factor here."""
+    # a: (M,) or a stacked-schedule (R, M); E: int or (R,)
+    return _as_float(np.sum(a, axis=-1) * sp.d_model_bits)
+
+
 def _make_fedavg(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
-                 policy: Optional[KernelPolicy] = None, **_) -> FrameworkSpec:
-    def comm(a, E, sp):
-        # a: (M,) or a stacked-schedule (R, M); E: int or (R,)
-        return _as_float(np.sum(a, axis=-1) * sp.d_model_bits)
-    return _mlp_spec("fedavg", cfg, comm, lr=lr, batch_size=batch_size,
-                     pol=dispatch.get_policy(policy))
+                 policy: Optional[KernelPolicy] = None,
+                 quant: CommQuant = quantcomm.NONE, **_) -> FrameworkSpec:
+    return _mlp_spec("fedavg", cfg, _full_model_comm, lr=lr,
+                     batch_size=batch_size, pol=dispatch.get_policy(policy),
+                     quant=quant)
 
 
 def _make_sfl(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
-              policy: Optional[KernelPolicy] = None, **_) -> FrameworkSpec:
-    # per local step: smashed up + boundary grads down, one batch each
-    boundary_bits = 2 * batch_size * dnn.client_dims(cfg)[-1] * 32.0
+              policy: Optional[KernelPolicy] = None,
+              quant: CommQuant = quantcomm.NONE, **_) -> FrameworkSpec:
+    # per local step: smashed up + boundary grads down, one batch each —
+    # the boundary tensors ship in the CommQuant wire format too
+    boundary_bits = (2 * batch_size * dnn.client_dims(cfg)[-1]
+                     * float(quant.wire_bits))
 
     def comm(a, E, sp):
         return _as_float(np.sum(a, axis=-1)
                          * (np.asarray(E, np.float64) * boundary_bits
                             + sp.omega * sp.d_model_bits))
     return _mlp_spec("sfl", cfg, comm, lr=lr, batch_size=batch_size,
-                     pol=dispatch.get_policy(policy))
+                     pol=dispatch.get_policy(policy), quant=quant)
 
 
 def _make_oranfed(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
-                  policy: Optional[KernelPolicy] = None, **_) -> FrameworkSpec:
-    def comm(a, E, sp):
-        return _as_float(np.sum(a, axis=-1) * sp.d_model_bits)
-    return _mlp_spec("oranfed", cfg, comm, lr=lr, batch_size=batch_size,
-                     pol=dispatch.get_policy(policy))
+                  policy: Optional[KernelPolicy] = None,
+                  quant: CommQuant = quantcomm.NONE, **_) -> FrameworkSpec:
+    return _mlp_spec("oranfed", cfg, _full_model_comm, lr=lr,
+                     batch_size=batch_size, pol=dispatch.get_policy(policy),
+                     quant=quant)
+
+
+def _make_fedora(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
+                 policy: Optional[KernelPolicy] = None,
+                 quant: CommQuant = quantcomm.NONE, **_) -> FrameworkSpec:
+    """FedORA [arXiv 2505.19211]: full-model FL whose cohort is set by the
+    RIC's per-round resource allocation (``FedORAPolicy``); same local
+    training and wire payload as FedAvg — a new comm/selection pair over
+    the unified engine, zero new training code."""
+    return _mlp_spec("fedora", cfg, _full_model_comm, lr=lr,
+                     batch_size=batch_size, pol=dispatch.get_policy(policy),
+                     quant=quant)
+
+
+def _make_ecofl(cfg: DNNConfig, *, lr: float = 0.05, batch_size: int = 32,
+                policy: Optional[KernelPolicy] = None,
+                quant: CommQuant = quantcomm.NONE, **_) -> FrameworkSpec:
+    """EcoFL [arXiv 2507.21698]: full-model FL with energy-first client
+    selection (``EcoFLPolicy``); per-round energy of the realized schedule
+    is ``repro.core.cost.round_energy``."""
+    return _mlp_spec("ecofl", cfg, _full_model_comm, lr=lr,
+                     batch_size=batch_size, pol=dispatch.get_policy(policy),
+                     quant=quant)
 
 
 def _make_splitme(cfg: DNNConfig, *, lr_c: float = 0.05, lr_s: float = 0.02,
                   temperature: float = 2.0, batch_size: int = 32,
                   masked_loss_metric: bool = False,
-                  policy: Optional[KernelPolicy] = None, **_) -> FrameworkSpec:
+                  policy: Optional[KernelPolicy] = None,
+                  quant: CommQuant = quantcomm.NONE, **_) -> FrameworkSpec:
     """SplitMe spec.  ``masked_loss_metric=False`` reproduces the seed
     trainer's loss metric (mean over the full E_max scan, frozen tail
     included) and requires ``e_max = sp.E_max``; ``True`` averages over the
@@ -640,7 +878,7 @@ def _make_splitme(cfg: DNNConfig, *, lr_c: float = 0.05, lr_s: float = 0.02,
             PhaseSpec("server", 1, lr_s, server_step, "y1", server_targets,
                       loss_over_mask=masked_loss_metric),
         ),
-        comm_model=comm, batch_size=batch_size, policy=pol)
+        comm_model=comm, batch_size=batch_size, policy=pol, quant=quant)
 
 
 _REGISTRY: Dict[str, Callable[..., FrameworkSpec]] = {
@@ -648,6 +886,8 @@ _REGISTRY: Dict[str, Callable[..., FrameworkSpec]] = {
     "fedavg": _make_fedavg,
     "sfl": _make_sfl,
     "oranfed": _make_oranfed,
+    "fedora": _make_fedora,
+    "ecofl": _make_ecofl,
 }
 
 
@@ -656,17 +896,22 @@ def framework_names() -> Tuple[str, ...]:
 
 
 def make_spec(name: str, cfg: DNNConfig, *,
-              policy: "dispatch.PolicyLike" = None, **hyper) -> FrameworkSpec:
+              policy: "dispatch.PolicyLike" = None,
+              quant: "quantcomm.QuantLike" = None, **hyper) -> FrameworkSpec:
     """Build a framework spec.  ``policy`` (None / preset name /
     ``KernelPolicy``) selects kernels and precision for the phase losses;
-    it is resolved once here and bound into the spec, so every builder
-    downstream (round fns, eval fn, campaign) shares one numerics."""
+    ``quant`` (None / "none" / "bf16" / "int8" / ``CommQuant``) selects
+    the wire format of the aggregation payload.  Both are resolved once
+    here and bound into the spec, so every builder downstream (round fns,
+    eval fn, campaign) shares one numerics — pass the same ``quant`` to
+    ``make_policy`` so the comm/cost models count the same wire format."""
     try:
         factory = _REGISTRY[name]
     except KeyError:
         raise KeyError(
             f"unknown framework {name!r}; have {framework_names()}") from None
-    return factory(cfg, policy=dispatch.get_policy(policy), **hyper)
+    return factory(cfg, policy=dispatch.get_policy(policy),
+                   quant=quantcomm.get_quant(quant), **hyper)
 
 
 # ---------------------------------------------------------------------------

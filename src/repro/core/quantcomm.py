@@ -1,0 +1,164 @@
+"""Quantized-communication wire formats for the masked-FedAvg psum payload.
+
+The paper's Fig. 3b/4b comparisons hinge on per-framework communication
+volume; every §V framework uploads f32 (32-bit) tensors.  This module is
+the EcoFL-direction follow-on: a ``CommQuant`` policy that narrows the wire
+format of the round's single aggregation communication — the masked-FedAvg
+payload that ``engine.psum_bundle`` moves across the mesh — and lets every
+framework's ``comm_model``, the eq. 18/20 latency/cost curves, and the
+Alg. 1 / P2 deadline selection respond to the narrower payload (a client
+whose quantized upload now fits its slice deadline gets admitted).
+
+Three wire formats:
+
+* ``none``  — f32, byte-identical to the unquantized engine (the default;
+  every parity test pins this path to the seed numerics),
+* ``bf16``  — the payload is rounded to bfloat16 before the all-reduce and
+  widened back after (16 wire bits/element).  Deterministic; per-round
+  aggregation error is bounded by the bf16 mantissa (~3e-3 relative),
+* ``int8``  — 8-bit stochastic rounding on a per-tensor max-abs grid with
+  an f32 ERROR-FEEDBACK accumulator: each uploader (device shard) adds the
+  residual it could not express last round to this round's payload before
+  re-quantizing, so the quantization error telescopes instead of
+  accumulating (``deq + ef_new == value + ef_old`` exactly, per round).
+
+The quantization is applied where the communication happens — the partial
+aggregation sums each shard contributes to the one fused psum
+(quantize-before-psum, dequantize-after) — so the one-all-reduce-per-round
+invariant of the sharded engine round is preserved structurally
+(tests/test_quantcomm.py lowers the HLO and counts).  ``int8`` is a
+*simulated* wire format: the values crossing the (simulated) wire live on
+the 255-level grid but are carried as f32 in the HLO, because an int8
+all-reduce sum would overflow — real deployments use a custom reduction.
+Comm accounting therefore counts ``wire_bits`` analytically everywhere
+(``repro.launch.fl_dryrun`` does the same for the lowered collectives).
+
+``engine.make_spec(..., quant=...)`` binds a ``CommQuant`` into the
+framework spec and ``engine.make_policy(..., quant=...)`` scales the
+derived SystemParams (S_m, d_model_bits) by ``wire_bits/32``, so comm
+volume, latency, cost and selection all see the quantized format.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+_WIRE_BITS = {"none": 32, "bf16": 16, "int8": 8}
+
+
+@dataclass(frozen=True)
+class CommQuant:
+    """Wire format of the aggregation payload (see module docstring).
+
+    ``error_feedback`` only affects ``int8`` (the stochastic mode);
+    ``levels`` is the half-range of the signed grid (127 → the payload
+    occupies the symmetric int8 range [-127, 127])."""
+    mode: str = "none"            # none | bf16 | int8
+    error_feedback: bool = True
+    levels: int = 127
+
+    def __post_init__(self):
+        if self.mode not in _WIRE_BITS:
+            raise KeyError(f"unknown CommQuant mode {self.mode!r}; "
+                           f"have {quant_names()}")
+
+    @property
+    def wire_bits(self) -> int:
+        return _WIRE_BITS[self.mode]
+
+    @property
+    def wire_scale(self) -> float:
+        """Payload size relative to f32 (multiplies bit counts)."""
+        return self.wire_bits / 32.0
+
+    @property
+    def stochastic(self) -> bool:
+        return self.mode == "int8"
+
+    @property
+    def stateful(self) -> bool:
+        """True when rounds must carry an error-feedback accumulator."""
+        return self.stochastic and self.error_feedback
+
+
+NONE = CommQuant()
+BF16 = CommQuant(mode="bf16")
+INT8 = CommQuant(mode="int8")
+
+_NAMED = {"none": NONE, "bf16": BF16, "int8": INT8}
+
+QuantLike = Union[None, str, CommQuant]
+
+
+def quant_names() -> Tuple[str, ...]:
+    return tuple(_NAMED)
+
+
+def get_quant(quant: QuantLike = None) -> CommQuant:
+    """Normalize ``None`` / mode name / ``CommQuant`` to a ``CommQuant``."""
+    if quant is None:
+        return NONE
+    if isinstance(quant, str):
+        try:
+            return _NAMED[quant]
+        except KeyError:
+            raise KeyError(f"unknown CommQuant mode {quant!r}; "
+                           f"have {quant_names()}") from None
+    return quant
+
+
+# ---------------------------------------------------------------------------
+# Wire-format simulation
+# ---------------------------------------------------------------------------
+
+def simulate_cast(tree: Any, dtype) -> Any:
+    """Round every leaf through ``dtype`` and widen back (the bf16 wire
+    format when there is no real psum to carry it — the single-device
+    round simulates the same rounding the sharded bundle applies)."""
+    return jax.tree.map(
+        lambda v: v.astype(dtype).astype(v.dtype), tree)
+
+
+def _sr_quantize_leaf(v: jax.Array, ef: Optional[jax.Array],
+                      key: jax.Array, levels: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Stochastic rounding of one payload tensor onto a per-tensor max-abs
+    grid.  Returns (dequantized wire value, new error-feedback residual).
+
+    The EF invariant ``deq + ef_new == v + ef_old`` holds exactly (up to
+    one f32 subtraction), so the error telescopes across rounds.
+    """
+    tot = v + ef if ef is not None else v
+    scale = jnp.maximum(jnp.max(jnp.abs(tot)), 1e-12) / levels
+    u = jax.random.uniform(key, tot.shape, dtype=tot.dtype)
+    q = jnp.clip(jnp.floor(tot / scale + u), -levels, levels)
+    deq = q * scale
+    return deq, tot - deq
+
+
+def fake_quant_int8(tree: Any, state: Any, key: jax.Array,
+                    quant: CommQuant) -> Tuple[Any, Any]:
+    """Quantize a psum payload pytree to the int8 wire grid (stochastic
+    rounding, per-tensor scale, optional error feedback).
+
+    ``state`` is the EF accumulator with the same structure as ``tree``
+    (or ``()`` when ``quant.stateful`` is False).  Returns the dequantized
+    payload (f32 values on the 255-level grid — the simulated wire) and
+    the updated state.  Each leaf draws an independent subkey, so the
+    training RNG chain is untouched (callers derive ``key`` by
+    ``fold_in``, not by advancing the round split chain)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    ef_leaves = (jax.tree.leaves(state) if quant.stateful
+                 else [None] * len(leaves))
+    keys = jax.random.split(key, len(leaves))
+    out, new_ef = [], []
+    for leaf, ef, k in zip(leaves, ef_leaves, keys):
+        deq, resid = _sr_quantize_leaf(leaf, ef, k, quant.levels)
+        out.append(deq)
+        new_ef.append(resid)
+    new_state = (jax.tree.unflatten(treedef, new_ef) if quant.stateful
+                 else state)
+    return jax.tree.unflatten(treedef, out), new_state

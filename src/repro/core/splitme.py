@@ -45,7 +45,8 @@ class SplitMeTrainer:
                  lr_c: float = 0.05, lr_s: float = 0.02,
                  temperature: float = 2.0, batch_size: int = 32,
                  e_initial: int = 20, gamma: float = 1e-3, seed: int = 0,
-                 kernel_policy=None, interactive: bool = False):
+                 kernel_policy=None, comm_quant=None,
+                 interactive: bool = False):
         assert lr_c > lr_s, "Corollary 3: η_C > η_S (B_1 < B_2)"
         self.cfg = cfg
         self.x = jnp.asarray(client_data["x"])      # (M, n, d)
@@ -58,18 +59,21 @@ class SplitMeTrainer:
         # round k's reductions are still in flight; fetch_history() pulls
         # everything host-side in ONE transfer at campaign end.
         self.interactive = interactive
-        # private SystemParams copy + Alg. 1/P2 policy (never mutates `sp`)
+        # private SystemParams copy + Alg. 1/P2 policy (never mutates `sp`);
+        # comm_quant scales the wire payloads P2 optimizes over
         self.sp, self.policy = engine.make_policy(
             "splitme", sp, cfg, e_initial=e_initial,
-            n_samples_per_client=int(self.x.shape[1]))
+            n_samples_per_client=int(self.x.shape[1]), quant=comm_quant)
         self.key = jax.random.PRNGKey(seed)
         self._spec = engine.make_spec(
             "splitme", cfg, lr_c=lr_c, lr_s=lr_s, temperature=temperature,
-            batch_size=batch_size, policy=kernel_policy)
+            batch_size=batch_size, policy=kernel_policy, quant=comm_quant)
         self.w_c, self.w_s_inv = self._spec.init_fn(self.key)
         self.E = e_initial
         self.history: List[RoundMetrics] = []
         self._round = 0
+        self._qstate = engine.init_quant_state(self._spec,
+                                               (self.w_c, self.w_s_inv))
         self._round_fn = engine.build_round_fn(
             self._spec, cfg, self.x, self.y, e_max=self.sp.E_max)
         # jitted Step-4-inversion + stitched-forward accuracy (one compile,
@@ -81,8 +85,8 @@ class SplitMeTrainer:
     # ------------------------------------------------------------------
     def _jit_round(self, w_c, w_s_inv, a_mask, e_steps, key):
         """Seed-compatible signature over the engine round (steps 3-5)."""
-        (w_c, w_s_inv), (closs, sloss) = self._round_fn(
-            (w_c, w_s_inv), a_mask, e_steps, key)
+        (w_c, w_s_inv), (closs, sloss), self._qstate = self._round_fn(
+            (w_c, w_s_inv), a_mask, e_steps, key, self._qstate)
         return w_c, w_s_inv, closs, sloss
 
     # ------------------------------------------------------------------

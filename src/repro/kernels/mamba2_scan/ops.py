@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.common import pad_to, use_interpret
 from repro.kernels.mamba2_scan.mamba2_scan import mamba2_scan_pallas

@@ -13,7 +13,6 @@ BlockSpec layout (MXU-aligned, fp32 accumulation):
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

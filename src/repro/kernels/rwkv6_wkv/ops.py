@@ -4,7 +4,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.common import pad_to, use_interpret
 from repro.kernels.rwkv6_wkv.rwkv6_wkv import rwkv6_wkv_pallas

@@ -70,6 +70,20 @@ def _host_fetch(tree):
     return jax.device_get(tree)
 
 
+def _init_qstate(spec, params, mesh=None):
+    """Seed-stacked CommQuant error-feedback accumulator: ``zeros_like`` on
+    the seed-stacked params gives the per-seed state directly; the sharded
+    round additionally keeps one residual per client shard (axis 1, after
+    the seed axis)."""
+    qstate = engine.init_quant_state(spec, params)
+    if mesh is not None and spec.quant.stateful:
+        n_shards = engine.n_client_shards(mesh)
+        qstate = jax.tree.map(
+            lambda z: jnp.zeros((z.shape[0], n_shards) + z.shape[1:],
+                                z.dtype), qstate)
+    return qstate
+
+
 @dataclass
 class RoundSchedule:
     """Precomputed system-side trajectory, shared by every seed."""
@@ -102,15 +116,18 @@ class CampaignResult:
 def plan_schedule(framework: str, sp: SystemParams, cfg: DNNConfig,
                   rounds: int, *, policy_seed: int = 0, K: int = 10,
                   E: int = 10, e_initial: int = 20,
-                  n_samples_per_client: Optional[int] = None
-                  ) -> Tuple[SystemParams, RoundSchedule]:
+                  n_samples_per_client: Optional[int] = None,
+                  quant=None) -> Tuple[SystemParams, RoundSchedule]:
     """Run the framework's host-side policy for `rounds` rounds.
 
     Returns the framework's derived SystemParams copy and the schedule.
+    ``quant`` (a ``CommQuant`` / mode name) scales the wire payloads the
+    policy optimizes over, so deadline/energy selection responds to the
+    quantized format.
     """
     sp, policy = engine.make_policy(
         framework, sp, cfg, seed=policy_seed, K=K, E=E, e_initial=e_initial,
-        n_samples_per_client=n_samples_per_client)
+        n_samples_per_client=n_samples_per_client, quant=quant)
     a_l, b_l, e_l = [], [], []
     for _ in range(rounds):
         a, b, e = policy.step()
@@ -187,7 +204,7 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
                  policy_seed: Optional[int] = None, scan: bool = True,
                  mesh=None, eval_every: Optional[int] = None,
                  eval_gamma: float = 1e-3, strict_transfers: bool = False,
-                 policy=None, **hyper) -> CampaignResult:
+                 policy=None, quant=None, **hyper) -> CampaignResult:
     """Train `len(seeds)` independent runs of `framework` in one compiled
     scan-over-rounds, vmapped over the seed axis.
 
@@ -212,6 +229,13 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
     ``"kernel_bf16"`` / a ``repro.kernels.dispatch.KernelPolicy``) selects
     the kernel dispatch + precision for every round AND the fused eval, so
     the whole scanned campaign runs kernelized end-to-end.
+
+    ``quant`` (None / "none" / "bf16" / "int8" /
+    ``repro.core.quantcomm.CommQuant``) narrows the wire format of the
+    masked-FedAvg aggregation payload: the rounds quantize-before-psum
+    (int8 carries a per-seed error-feedback accumulator through the scan),
+    and comm_bits / latency / cost / the schedule's selection all account
+    the quantized bits.
     """
     x = jnp.asarray(client_data["x"])
     y = jnp.asarray(client_data["y"])
@@ -225,14 +249,14 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
         policy_seed = min(seeds)
     sp, sched = plan_schedule(framework, sp, cfg, rounds, K=K, E=E,
                               e_initial=e_initial, policy_seed=policy_seed,
-                              n_samples_per_client=n_m)
+                              n_samples_per_client=n_m, quant=quant)
     # masked_loss_metric: average losses over the executed steps only, so a
     # round's scan can be exactly E_t steps long.  Trained params are
     # identical to the serial trainers (masked updates are exact no-ops);
     # only SplitMe's *loss metric* differs from the seed quirk of averaging
     # over the full E_max scan.
     spec = engine.make_spec(framework, cfg, masked_loss_metric=True,
-                            policy=policy, **hyper)
+                            policy=policy, quant=quant, **hyper)
     comm, nsel, sim, cost = _schedule_system_metrics(spec, sched, sp)
 
     if mesh is not None:
@@ -306,14 +330,17 @@ def _run_rounds_loop(spec, cfg, sp, sched, x, y, seeds):
                                         e_max=max(1, e_bucket),
                                         jit=False, gather=True)
             fns[k_bucket, e_bucket] = jax.jit(
-                jax.vmap(raw, in_axes=(0, None, None, None, 0)),
-                donate_argnums=(0,))
+                jax.vmap(raw, in_axes=(0, None, None, None, 0, 0)),
+                donate_argnums=(0, 5))
         return fns[k_bucket, e_bucket]
 
     init_keys = jnp.stack([jax.random.PRNGKey(s + spec.init_key_offset)
                            for s in seeds])
     key_arr = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
     params = jax.vmap(spec.init_fn)(init_keys)
+    # per-seed error-feedback accumulator (zeros_like on the seed-stacked
+    # params gives the stacked state directly; () when stateless)
+    qstate = engine.init_quant_state(spec, params)
     loss_rows = []
     for r in range(rounds):
         k_r, e_r = int(counts[r]), int(sched.E[r])
@@ -325,9 +352,9 @@ def _run_rounds_loop(spec, cfg, sp, sched, x, y, seeds):
         # per-seed key chains advance exactly like the serial trainers
         ks = jax.vmap(jax.random.split)(key_arr)
         key_arr, subs = ks[:, 0], ks[:, 1]
-        params, loss_r = round_exec(kb, e_of[e_r])(
+        params, loss_r, qstate = round_exec(kb, e_of[e_r])(
             params, jnp.asarray(idx), jnp.asarray(mask), jnp.asarray(e_r),
-            subs)
+            subs, qstate)
         loss_rows.append(loss_r)
 
     losses = np.stack(
@@ -375,28 +402,32 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
             raw = engine.build_round_fn(spec, cfg, x, y, e_max=max(1, eb),
                                         jit=False, gather=True)
 
-            def call_round(params, xr, subs):
-                return jax.vmap(raw, in_axes=(0, None, None, None, 0))(
-                    params, xr["idx"], xr["mask"], xr["e"], subs)
+            def call_round(params, xr, subs, qstate):
+                return jax.vmap(raw, in_axes=(0, None, None, None, 0, 0))(
+                    params, xr["idx"], xr["mask"], xr["e"], subs, qstate)
         else:
             raw = engine.build_sharded_round_fn(
                 spec, cfg, mesh, n_clients=int(sp.M), e_max=max(1, eb),
                 jit=False)
 
-            def call_round(params, xr, subs):
-                return jax.vmap(raw, in_axes=(0, None, None, None, None, 0))(
-                    params, x, y, xr["mask"], xr["e"], subs)
+            def call_round(params, xr, subs, qstate):
+                return jax.vmap(
+                    raw, in_axes=(0, None, None, None, None, 0, 0))(
+                    params, x, y, xr["mask"], xr["e"], subs, qstate)
 
         nan_row = jnp.full((n_seeds,), jnp.nan, jnp.float32)
 
         def body(carry, xr):
-            params, keys = carry
+            params, keys, qstate = carry
             ks = jax.vmap(jax.random.split)(keys)
             nkeys, subs = ks[:, 0], ks[:, 1]
-            nparams, phase_losses = call_round(params, xr, subs)
+            nparams, phase_losses, nqstate = call_round(params, xr, subs,
+                                                        qstate)
             live = xr["live"] > 0
             params = jax.tree.map(lambda n, o: jnp.where(live, n, o),
                                   nparams, params)
+            qstate = jax.tree.map(lambda n, o: jnp.where(live, n, o),
+                                  nqstate, qstate)
             keys = jnp.where(live, nkeys, keys)
             loss_row = jnp.where(live, jnp.stack(phase_losses, -1), jnp.nan)
             if eval_fn is None:
@@ -405,19 +436,20 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
                 acc = jax.lax.cond(
                     jnp.logical_and(xr["do_eval"] > 0, live),
                     jax.vmap(eval_fn), lambda p: nan_row, params)
-            return (params, keys), {"loss": loss_row, "acc": acc,
-                                    "live": xr["live"]}
+            return (params, keys, qstate), {"loss": loss_row, "acc": acc,
+                                            "live": xr["live"]}
 
-        def seg(params, key_arr, xs):
-            return jax.lax.scan(body, (params, key_arr), xs)
+        def seg(params, key_arr, qstate, xs):
+            return jax.lax.scan(body, (params, key_arr, qstate), xs)
 
-        fns[kb, eb, lb] = jax.jit(seg, donate_argnums=(0, 1))
+        fns[kb, eb, lb] = jax.jit(seg, donate_argnums=(0, 1, 2))
         return fns[kb, eb, lb]
 
     init_keys = jnp.stack([jax.random.PRNGKey(s + spec.init_key_offset)
                            for s in seeds])
     key_arr = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
     params = jax.vmap(spec.init_fn)(init_keys)
+    qstate = _init_qstate(spec, params, mesh)
     ys_all = []
     for kb, eb, start, length in segs:
         lb = len_of[length]
@@ -441,7 +473,8 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
             mask = np.zeros((lb, int(sp.M)), np.float32)
             mask[:length] = sched.a[start:start + length]
             xs["mask"] = mask
-        (params, key_arr), ys = seg_exec(kb, eb, lb)(params, key_arr, xs)
+        (params, key_arr, qstate), ys = seg_exec(kb, eb, lb)(
+            params, key_arr, qstate, xs)
         ys_all.append(ys)
 
     buffers = {k: (jnp.concatenate([ys[k] for ys in ys_all], axis=0)
@@ -480,7 +513,7 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
                      eval_gamma: float = 1e-3,
                      eval_every: Optional[int] = None, mesh=None,
                      strict_transfers: bool = False, policy=None,
-                     **hyper) -> List[CampaignResult]:
+                     quant=None, **hyper) -> List[CampaignResult]:
     """Multi-config campaign over SystemParams variants.
 
     With ``vmap_configs=True`` (default) every variant's schedule shares
@@ -498,7 +531,7 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
                              e_initial=e_initial, policy_seed=policy_seed,
                              eval_gamma=eval_gamma, eval_every=eval_every,
                              mesh=mesh, strict_transfers=strict_transfers,
-                             policy=policy, **hyper)
+                             policy=policy, quant=quant, **hyper)
                 for sp in system_params]
     if mesh is not None:
         raise ValueError("mesh (sharded rounds) requires vmap_configs=False")
@@ -510,7 +543,7 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
         policy_seed = min(seeds)
     planned = [plan_schedule(framework, sp, cfg, rounds, K=K, E=E,
                              e_initial=e_initial, policy_seed=policy_seed,
-                             n_samples_per_client=n_m)
+                             n_samples_per_client=n_m, quant=quant)
                for sp in system_params]
     for sp_d, _ in planned:
         if sp_d.M != x.shape[0]:
@@ -524,7 +557,7 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
     e_max = max(1, int(e_all.max()))
 
     spec = engine.make_spec(framework, cfg, masked_loss_metric=True,
-                            policy=policy, **hyper)
+                            policy=policy, quant=quant, **hyper)
     raw = engine.build_round_fn(spec, cfg, x, y, e_max=e_max, jit=False,
                                 gather=False)
     eval_fn = None
@@ -541,14 +574,17 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
         params_s = jax.vmap(spec.init_fn)(init_keys)          # (S, …)
         params = jax.tree.map(
             lambda p: jnp.broadcast_to(p[None], (V,) + p.shape), params_s)
+        # per-(variant, seed) error-feedback accumulator ((V, S, …) zeros)
+        qstate = engine.init_quant_state(spec, params)
 
         def body(carry, xr):
-            params, keys = carry                  # keys (S, 2): the seed
+            params, keys, qstate = carry          # keys (S, 2): the seed
             ks = jax.vmap(jax.random.split)(keys)  # chain is variant-free
             nkeys, subs = ks[:, 0], ks[:, 1]
-            nparams, phase_losses = jax.vmap(
-                lambda pv, av, ev: jax.vmap(raw, in_axes=(0, None, None, 0))(
-                    pv, av, ev, subs))(params, xr["a"], xr["e"])
+            nparams, phase_losses, nqstate = jax.vmap(
+                lambda pv, av, ev, qv: jax.vmap(
+                    raw, in_axes=(0, None, None, 0, 0))(
+                    pv, av, ev, subs, qv))(params, xr["a"], xr["e"], qstate)
             loss_row = jnp.stack(phase_losses, -1)        # (V, S, n_ph)
             if eval_fn is None:
                 acc = jnp.full((V, S), jnp.nan, jnp.float32)
@@ -558,9 +594,10 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
                     jax.vmap(jax.vmap(eval_fn)),
                     lambda p: jnp.full((V, S), jnp.nan, jnp.float32),
                     nparams)
-            return (nparams, nkeys), {"loss": loss_row, "acc": acc}
+            return (nparams, nkeys, nqstate), {"loss": loss_row, "acc": acc}
 
-        (params, _), ys = jax.lax.scan(body, (params, key_arr), xs)
+        (params, _, _), ys = jax.lax.scan(body, (params, key_arr, qstate),
+                                          xs)
         return params, ys
 
     guard = (jax.transfer_guard_device_to_host("disallow")

@@ -15,7 +15,6 @@ Results are cached as JSON under benchmarks/results/dryrun/ so reruns skip
 completed combos.
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -24,7 +23,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import INPUT_SHAPES, get_config, list_configs
+from repro.configs.base import INPUT_SHAPES, list_configs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (abstract_cache, abstract_params, batch_specs,
                                 build_for)

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.splitme_dnn import DNN10, DNNConfig
-from repro.core import dnn
+from repro.core import dnn, quantcomm
 from repro.core.distributed import (_client_axes, make_distributed_inversion,
                                     make_splitme_round)
 from repro.launch.mesh import make_production_mesh
@@ -135,7 +135,22 @@ def make_sfl_round(cfg: DNNConfig, mesh, *, n_clients: int,
 # Lowering + collective accounting
 # ---------------------------------------------------------------------------
 
-def lower_round(kind: str, mesh, M: int, n: int, E: int):
+def collective_comm_bits(colls, quant=None) -> float:
+    """Wire bits of the lowered collectives under the ``CommQuant``
+    accounting: payload ELEMENT count × the policy's wire width.
+
+    This used to be ``result_bytes * 8`` — hardcoding whatever dtype the
+    HLO printed, which is f32 even for quantized rounds: XLA's CPU passes
+    hoist the bf16 converts out of the all-reduce, and int8 is a simulated
+    wire format carried as f32 in the HLO by design (an int8 all-reduce
+    sum would overflow).  Counting elements × ``wire_bits`` reports the
+    quantized payload width on every backend
+    (tests/test_quantcomm.py pins bf16 → exactly half the f32 bits)."""
+    q = quantcomm.get_quant(quant)
+    return float(sum(c.result_elems for c in colls)) * q.wire_bits
+
+
+def lower_round(kind: str, mesh, M: int, n: int, E: int, quant=None):
     cfg = DNN10
     SDS = jax.ShapeDtypeStruct
     f32, i32 = jnp.float32, jnp.int32
@@ -143,7 +158,7 @@ def lower_round(kind: str, mesh, M: int, n: int, E: int):
     key = SDS((2,), jnp.uint32)
     if kind == "splitme":
         fn = make_splitme_round(cfg, mesh, n_clients=M, samples_per_client=n,
-                                E=E, unroll_steps=True)
+                                E=E, unroll_steps=True, quant=quant)
         w_i = jax.eval_shape(
             lambda: dnn.init_inverse_server(jax.random.PRNGKey(0), cfg))
         args = (w_c, w_i, SDS((M, n, cfg.n_features), f32),
@@ -170,6 +185,8 @@ def lower_round(kind: str, mesh, M: int, n: int, E: int):
         cost = cost[0] if cost else {}
     return {
         "collective_bytes": float(sum(c.result_bytes for c in colls)),
+        "comm_bits": collective_comm_bits(colls, quant),
+        "quant": quantcomm.get_quant(quant).mode,
         "collective_s": float(sum(c.wire_seconds for c in colls)),
         "counts": {k: sum(1 for c in colls if c.kind == k)
                    for k in {c.kind for c in colls}},
@@ -195,6 +212,22 @@ def main():
             print(f"{kind} E={E}: collective_bytes="
                   f"{r['collective_bytes']:.3e} "
                   f"({r['counts']}) [{time.time() - t0:.1f}s]", flush=True)
+    # quantized wire formats: same one-all-reduce structure, narrower bits
+    for qm in ("bf16", "int8"):
+        r = lower_round("splitme", mesh, args.clients, args.samples, 1,
+                        quant=qm)
+        out[f"splitme_E1_{qm}"] = r
+        print(f"splitme E=1 quant={qm}: comm_bits={r['comm_bits']:.3e} "
+              f"({r['counts']})", flush=True)
+    # comm_bits is elems × wire_bits by construction, so the halving alone
+    # would be tautological — the flag also demands the quantized lowering
+    # kept the one-fused-all-reduce structure with a real payload
+    out["quant_bf16_halves_comm_bits"] = bool(
+        out["splitme_E1_bf16"]["counts"] == {"all-reduce": 1}
+        and out["splitme_E1_int8"]["counts"] == {"all-reduce": 1}
+        and out["splitme_E1_bf16"]["comm_bits"] > 0
+        and abs(out["splitme_E1_bf16"]["comm_bits"]
+                - 0.5 * out["splitme_E1"]["comm_bits"]) < 1e-6)
     out["inversion"] = lower_round("inversion", mesh, args.clients,
                                    args.samples, 1)
     print(f"step4 inversion: collective_bytes="

@@ -28,14 +28,13 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import INPUT_SHAPES, get_config, list_configs
+from repro.configs.base import INPUT_SHAPES, get_config
 from repro.launch.dryrun import ARCHS, RESULTS_DIR
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (abstract_cache, abstract_params, batch_specs,
                                 decode_window_for)
 from repro.models.transformer import build_model
-from repro.roofline.analysis import (analyze, model_flops_estimate,
-                                     parse_collectives)
+from repro.roofline.analysis import model_flops_estimate, parse_collectives
 from repro.runtime.steps import (default_optimizer, make_prefill_step,
                                  make_serve_step, make_train_step)
 from repro.sharding.partition import (batch_shardings, cache_shardings,

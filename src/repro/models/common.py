@@ -7,7 +7,6 @@ for the dry-run (no device allocation).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,7 @@ Layer stacks are ``lax.scan`` over stacked params (compact HLO ⇒ fast
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ second moments for >=2-D params — the only optimizer whose state fits for the
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,10 +12,9 @@ per-device payloads of all-gather / all-reduce / reduce-scatter / all-to-all
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List
 
-import numpy as np
 
 from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
 
@@ -33,8 +32,10 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
-def _shape_bytes(shapes_txt: str) -> int:
+def _shape_bytes(shapes_txt: str) -> tuple:
+    """(total bytes, total element count) over the printed result shapes."""
     total = 0
+    elems = 0
     for dt, dims in _SHAPE_RE.findall(shapes_txt):
         if dt not in _DTYPE_BYTES:
             continue
@@ -43,7 +44,8 @@ def _shape_bytes(shapes_txt: str) -> int:
             if d:
                 n *= int(d)
         total += n * _DTYPE_BYTES[dt]
-    return total
+        elems += n
+    return total, elems
 
 
 @dataclass
@@ -51,6 +53,12 @@ class CollectiveOp:
     kind: str
     result_bytes: int
     group_size: int
+    # element count of the payload, independent of the HLO dtype — wire
+    # accounting under a quantized (CommQuant) format multiplies this by
+    # the LOGICAL wire width, since XLA's CPU passes promote narrow
+    # all-reduces back to f32 (and int8 is a simulated wire format carried
+    # as f32 in the HLO either way)
+    result_elems: int = 0
 
     @property
     def wire_seconds(self) -> float:
@@ -77,7 +85,8 @@ def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
         shapes_txt, kind = m.group(1), m.group(2)
         g = _GROUP_RE.search(line)
         group_size = int(g.group(2)) if g else 2
-        ops.append(CollectiveOp(kind, _shape_bytes(shapes_txt), group_size))
+        nbytes, nelems = _shape_bytes(shapes_txt)
+        ops.append(CollectiveOp(kind, nbytes, group_size, nelems))
     return ops
 
 

@@ -1,4 +1,3 @@
-import os
 import sys
 from pathlib import Path
 
@@ -6,7 +5,6 @@ from pathlib import Path
 # only launch/dryrun.py (its own process) forces 512 placeholder devices.
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import numpy as np
 import pytest
 
 

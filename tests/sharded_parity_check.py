@@ -34,13 +34,14 @@ def run_check(data_shards: int) -> None:
     for name in engine.framework_names():
         spec = engine.make_spec(name, DNN10)
         params = spec.init_fn(jax.random.PRNGKey(3))
+        qs = engine.init_quant_state(spec, params)     # () for quant=none
         single = engine.build_round_fn(spec, DNN10, x, y, e_max=e_max,
                                        donate=False)
-        p1, l1 = single(params, a, jnp.asarray(e_steps), key)
+        p1, l1, _ = single(params, a, jnp.asarray(e_steps), key, qs)
         sharded = engine.build_sharded_round_fn(spec, DNN10, mesh,
                                                 n_clients=M, e_max=e_max,
                                                 donate=False)
-        p2, l2 = sharded(params, x, y, a, jnp.asarray(e_steps), key)
+        p2, l2, _ = sharded(params, x, y, a, jnp.asarray(e_steps), key, qs)
         for g, h in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
             np.testing.assert_allclose(np.asarray(g), np.asarray(h),
                                        atol=ATOL, rtol=0,

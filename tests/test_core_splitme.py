@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.splitme_dnn import DNN10, DNNConfig
+from repro.configs.splitme_dnn import DNN10
 from repro.core import dnn, mutual
 from repro.core.cost import SystemParams
 from repro.core.splitme import SplitMeTrainer

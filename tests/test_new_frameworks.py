@@ -1,0 +1,118 @@
+"""FedORA / EcoFL — the registry's two resource-allocation baselines
+beyond the paper's four frameworks (PAPERS.md; arXiv 2505.19211 /
+2507.21698).  New comm model + selection policy only; the training hot
+path is the unchanged unified engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.splitme_dnn import DNN10
+from repro.core import engine
+from repro.core.baselines import EcoFLTrainer, FedORATrainer
+from repro.core.cost import SystemParams, round_energy, uplink_time
+from repro.launch import campaign
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    from repro.data import oran
+    X, y = oran.generate(n_per_class=300, seed=0)
+    (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
+    cd = oran.partition_non_iid(Xtr, ytr, 12, samples_per_client=32, seed=0)
+    return cd, (Xte, yte)
+
+
+def test_registry_lists_six_frameworks():
+    assert engine.framework_names() == (
+        "splitme", "fedavg", "sfl", "oranfed", "fedora", "ecofl")
+
+
+def test_fedora_policy_admits_deadline_feasible_cohort():
+    """Every admitted client's realized round time (compute + min-max
+    allocated uplink) fits its slice deadline, the allocation normalizes,
+    and the rule is deterministic."""
+    sp, _ = engine.make_policy("fedora", SystemParams(M=20, seed=0), DNN10,
+                               E=5)
+    _, pol = engine.make_policy("fedora", SystemParams(M=20, seed=0), DNN10,
+                                E=5)
+    a, b, E = pol.step()
+    assert a.sum() >= 1
+    np.testing.assert_allclose(b.sum(), 1.0, atol=1e-9)
+    t = E * (sp.Q_C + sp.Q_S) + uplink_time(a, b, sp)
+    sel = a > 0
+    assert np.all(t[sel] <= sp.t_round[sel] + 1e-9)
+    a2, b2, _ = pol.step()
+    np.testing.assert_array_equal(a, a2)
+    np.testing.assert_allclose(b, b2)
+
+
+def test_fedora_admits_at_least_as_many_under_quantization():
+    """The RIC allocation responds to the wire format: halving the payload
+    can only grow the deadline-feasible fastest-first prefix."""
+    _, p32 = engine.make_policy("fedora", SystemParams(M=30, seed=0), DNN10,
+                                E=5)
+    _, p16 = engine.make_policy("fedora", SystemParams(M=30, seed=0), DNN10,
+                                E=5, quant="bf16")
+    a32, _, _ = p32.step()
+    a16, _, _ = p16.step()
+    assert a16.sum() >= a32.sum()
+
+
+def test_ecofl_policy_selects_lowest_energy_clients():
+    sp, pol = engine.make_policy("ecofl", SystemParams(M=20, seed=0), DNN10,
+                                 K=6, E=5)
+    a, b, E = pol.step()
+    assert int(a.sum()) == 6
+    np.testing.assert_allclose(b.sum(), 1.0, atol=1e-9)
+    t_up_est = (sp.S_m + sp.omega * sp.d_model_bits) / (sp.B / 6)
+    energy = sp.p_tx_w * t_up_est + sp.p_cpu_w * E * (sp.Q_C + sp.Q_S)
+    want = np.zeros(sp.M)
+    want[np.argsort(energy, kind="stable")[:6]] = 1.0
+    np.testing.assert_array_equal(a, want)
+    # realized energy accounting is positive and quant-responsive
+    e32 = round_energy(a, b, E, sp)
+    sp16, pol16 = engine.make_policy("ecofl", SystemParams(M=20, seed=0),
+                                     DNN10, K=6, E=5, quant="bf16")
+    a16, b16, E16 = pol16.step()
+    assert 0 < round_energy(a16, b16, E16, sp16) < e32
+
+
+def test_new_trainers_run_rounds(small_data):
+    cd, test = small_data
+    for cls, kw in ((FedORATrainer, {"E": 3}), (EcoFLTrainer,
+                                                {"K": 4, "E": 3})):
+        tr = cls(DNN10, SystemParams(M=12, seed=0), cd, test, seed=0,
+                 interactive=True, **kw)
+        for _ in range(2):
+            m = tr.run_round()
+        assert len(tr.history) == 2
+        assert np.isfinite(m.client_loss)
+        assert m.comm_bits > 0 and m.n_selected >= 1
+        acc = tr.evaluate()
+        assert 0.0 <= acc <= 1.0
+
+
+@pytest.mark.parametrize("name", ["fedora", "ecofl"])
+def test_campaign_matches_serial_trainer(small_data, name):
+    """Both new frameworks' schedules are deterministic, so the vmapped
+    scanned campaign must reproduce the serial engine trainer."""
+    cd, test = small_data
+    cls, kw = {"fedora": (FedORATrainer, {"E": 3}),
+               "ecofl": (EcoFLTrainer, {"K": 4, "E": 3})}[name]
+    res = campaign.run_campaign(name, DNN10, SystemParams(M=12, seed=0), cd,
+                                rounds=3, seeds=(0, 1), **kw)
+    for i, s in enumerate((0, 1)):
+        tr = cls(DNN10, SystemParams(M=12, seed=0), cd, test, seed=s,
+                 interactive=True, **kw)
+        serial = [tr.run_round().client_loss for _ in range(3)]
+        np.testing.assert_allclose(res.losses[i, :, 0], serial, atol=1e-5,
+                                   rtol=0)
+        for r in range(3):
+            assert res.metrics[r].n_selected == tr.history[r].n_selected
+            np.testing.assert_allclose(res.metrics[r].comm_bits,
+                                       tr.history[r].comm_bits)
+    # different seeds trained different models
+    (params,) = res.params
+    delta = sum(float(np.abs(np.asarray(p[0]) - np.asarray(p[1])).sum())
+                for p in jax.tree.leaves(params))
+    assert delta > 0

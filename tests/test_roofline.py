@@ -1,8 +1,7 @@
 """Roofline HLO collective parser + term math."""
 import numpy as np
 
-from repro.roofline.analysis import (CollectiveOp, Roofline, analyze,
-                                     parse_collectives)
+from repro.roofline.analysis import CollectiveOp, analyze, parse_collectives
 
 HLO_SAMPLE = """
   %all-gather = f32[1024,32]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,4]<=[4,16]T(1,0), dimensions={0}

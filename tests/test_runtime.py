@@ -2,12 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config
 from repro.models.transformer import build_model
-from repro.runtime.steps import (default_optimizer, lm_loss, make_serve_step,
-                                 make_train_step)
+from repro.runtime.steps import default_optimizer, lm_loss, make_train_step
 
 
 def test_train_loss_decreases_smollm():

@@ -1,9 +1,8 @@
 """LR schedules incl. the paper's Corollary 2/3 rates."""
-import math
 
 import pytest
 
-from repro.optim.schedules import (constant, corollary2_rate, splitme_rates,
+from repro.optim.schedules import (corollary2_rate, splitme_rates,
                                    warmup_cosine)
 
 
