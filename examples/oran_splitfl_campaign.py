@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/oran_splitfl_campaign.py [--rounds 30]
         [--baselines] [--ckpt-dir /tmp/splitme] [--seeds 4] [--quant bf16]
+        [--scenario fading]
 
 Trains SplitMe to convergence on the COMMAG-style slice data (30 rounds, as
 in §V-B), checkpoints (w_C, w_S⁻¹) every 10 rounds, performs the final
@@ -20,6 +21,18 @@ masked-FedAvg aggregation payload: bf16 halves and int8 quarters every
 upload (int8 adds stochastic rounding with an f32 error-feedback
 accumulator), and comm volume, latency, cost and the deadline/energy
 selection policies all account the narrower format.
+
+``--scenario NAME`` runs against a time-varying O-RAN trace from the
+``repro.core.scenario`` registry — ``static`` (all-ones, identical to no
+scenario), ``fading`` (AR(1) log-normal channel + compute fade, deadline
+jitter), ``straggler`` (persistent slow cohort, Markov availability
+blackouts, mid-round dropouts), ``noniid`` (static RAN, Dirichlet(α)
+client partition replacing the one-class-per-client split).  A name may
+carry a level suffix: ``fading:0.8`` (fade σ), ``straggler:0.4``
+(blackout prob), ``noniid:0.1`` (α).  Selection/allocation re-solve per
+round against the round-t trace; with ``--seeds N`` the whole trace-driven
+campaign still runs as compiled scans with one host transfer
+(``--scenario-seed`` varies the trace draw).
 
 With ``--seeds N`` (N > 1) the run goes through the scanned multi-seed
 campaign runner instead: N independent seeds train through one compiled
@@ -75,13 +88,33 @@ def main():
                          "deterministic 16-bit rounding, int8 = stochastic "
                          "rounding + f32 error feedback; comm_bits/latency/"
                          "cost and the selection policies account it)")
+    ap.add_argument("--scenario", default=None,
+                    help="time-varying scenario from the repro.core.scenario "
+                         "registry: static | fading | straggler | noniid, "
+                         "optionally with a level suffix (fading:0.8, "
+                         "noniid:0.1); default: the frozen network snapshot")
+    ap.add_argument("--scenario-seed", type=int, default=0,
+                    help="seed of the scenario trace draw")
     args = ap.parse_args()
 
     X, y = oran.generate(n_per_class=2000, seed=0)
     (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
     sp = SystemParams()
-    clients = oran.partition_non_iid(Xtr, ytr, sp.M,
+    # the scenario decides the client partition (Dirichlet α for noniid,
+    # the paper's one-class-per-client split otherwise); serial trainers
+    # take a concrete pre-drawn trace, so build one long enough for the
+    # longest loop below
+    horizon = max(args.rounds, args.baseline_rounds)
+    trace = None
+    if args.scenario is not None:
+        from repro.core import scenario as scen
+        trace = scen.make_trace(args.scenario, horizon, sp.M,
+                                seed=args.scenario_seed)
+        clients = scen.partition_for(trace, Xtr, ytr, sp.M,
                                      samples_per_client=96, seed=0)
+    else:
+        clients = oran.partition_non_iid(Xtr, ytr, sp.M,
+                                         samples_per_client=96, seed=0)
 
     if args.seeds > 1:
         from repro.launch import campaign
@@ -101,7 +134,8 @@ def main():
                                         test_data=(Xte, yte),
                                         eval_every=args.eval_every,
                                         policy=args.policy,
-                                        quant=args.quant, **kw)
+                                        quant=args.quant, scenario=trace,
+                                        **kw)
             acc = res.accuracy
             print(f"[{name}] {len(seeds)} seeds x {rounds} rounds: "
                   f"acc={acc.mean():.3f}±{acc.std():.3f} "
@@ -117,7 +151,7 @@ def main():
 
     tr = SplitMeTrainer(DNN10, sp, clients, (Xte, yte), seed=0,
                         kernel_policy=args.policy, comm_quant=args.quant,
-                        interactive=True)
+                        scenario=trace, interactive=True)
     t0 = time.time()
     for k in range(args.rounds):
         m = tr.run_round(eval_acc=(k % 5 == 4))
@@ -144,7 +178,7 @@ def main():
             ("ecofl", EcoFLTrainer, {"K": 10, "E": 10}),
         ]:
             b = cls(DNN10, SystemParams(seed=0), copy.deepcopy(clients),
-                    (Xte, yte), comm_quant=args.quant, **kw)
+                    (Xte, yte), comm_quant=args.quant, scenario=trace, **kw)
             for _ in range(args.baseline_rounds):
                 b.run_round()
             print(f"[{name}] acc={b.evaluate():.3f} "

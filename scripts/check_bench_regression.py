@@ -6,30 +6,37 @@ committed baseline and fail CI on a real slowdown.
         --baseline /tmp/bench_baseline.json --fresh BENCH_fl.json \
         [--tolerance 0.30] [--mode reference]
 
-``scripts/ci.sh`` snapshots the committed ``BENCH_fl.json`` BEFORE the
-bench stage rewrites it, then runs this as the final stage.  The gate
-metric is the ``reference`` round-policy mode's ``rounds_per_sec`` — the
-pure-jnp f32 path every backend runs — with a tolerance band (default
-30%) absorbing runner noise; the other modes are reported informationally
-(on CPU they resolve to the same compiled program as reference, so their
-deltas show the estimator's noise floor).  ``steps_per_sec`` is printed
-alongside because it normalizes the adaptive schedule away.
+``scripts/ci.sh`` snapshots the baseline BEFORE the bench stage rewrites
+``BENCH_fl.json`` (preferring a runner-cached baseline over the committed
+one, so the gate is ARMED on CI from the second run on), then runs this as
+the final stage.  Two gates share the tolerance band (default 30%):
+
+* the ``reference`` round-policy mode's ``rounds_per_sec`` — the pure-jnp
+  f32 scanned-campaign path every backend runs (other modes reported
+  informationally; on CPU they resolve to the same compiled program, so
+  their deltas show the estimator's noise floor).  ``steps_per_sec`` is
+  printed alongside because it normalizes the adaptive schedule away.
+* PER-FRAMEWORK serial-trainer ``rounds_per_sec`` from the bench's
+  ``frameworks`` block — a per-framework diff table; any framework
+  regressing beyond tolerance fails, so a slowdown hiding in one
+  framework's round path (and invisible in the SplitMe-only mode gate)
+  still trips CI.  Baselines predating the per-framework field report
+  informationally.
 
 Absolute throughput is machine-specific, so the HARD gate only applies
 when the baseline's ``env`` fingerprint (platform / machine / cpu_count /
 backend, written by the bench) matches the fresh run's — a baseline
 committed from a dev box reports informationally on a different CI
-runner instead of failing it.  Same-environment reruns (the common CI
-case once a runner-produced baseline is committed, and every local
-pre-commit run) get the real gate.  ``--force-gate`` overrides the
-fingerprint check.
+runner instead of failing it.  Same-environment reruns (CI with the
+runner-cached baseline, and every local pre-commit run) get the real
+gate.  ``--force-gate`` overrides the fingerprint check.
 
 Missing/malformed baselines PASS with a warning: the first run on a new
 branch (or a baseline predating the current JSON schema) must not brick
 CI — committing the freshly written ``BENCH_fl.json`` re-arms the gate.
 
 Exit status: 0 = ok / skipped / informational, 1 = regression beyond
-tolerance.
+tolerance (mode or any framework).
 """
 from __future__ import annotations
 
@@ -53,42 +60,17 @@ def load_bench(path: Path, label: str):
         return None
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True, type=Path,
-                    help="committed BENCH_fl.json snapshot")
-    ap.add_argument("--fresh", required=True, type=Path,
-                    help="BENCH_fl.json written by the fast bench just now")
-    ap.add_argument("--tolerance", type=float, default=0.30,
-                    help="allowed fractional rounds/sec drop in --mode "
-                         "(default 0.30)")
-    ap.add_argument("--mode", default="reference",
-                    help="round-policy mode the gate applies to")
-    ap.add_argument("--force-gate", action="store_true",
-                    help="hard-gate even when the env fingerprints differ")
-    args = ap.parse_args()
+def _gate_row(br, fr, gated, tolerance):
+    """THE gating rule, shared by both diff tables: fractional rounds/sec
+    delta + whether it trips the gate.  Change it here, not in a table."""
+    delta = (fr - br) / br if br else 0.0
+    regressed = bool(gated and br and delta < -tolerance)
+    return delta, ("  << REGRESSION" if regressed else ""), regressed
 
-    base_data = load_bench(args.baseline, "baseline")
-    fresh_data = load_bench(args.fresh, "fresh")
-    if base_data is None or fresh_data is None:
-        return 0
-    base, fresh = base_data["modes"], fresh_data["modes"]
 
-    base_env = base_data.get("env")
-    fresh_env = fresh_data.get("env")
-    same_env = base_env is not None and base_env == fresh_env
-    gate_armed = same_env or args.force_gate
-    if not gate_armed:
-        print(f"[bench-gate] env fingerprint mismatch (baseline "
-              f"{base_env} vs fresh {fresh_env}) -> comparison is "
-              f"INFORMATIONAL; commit the freshly written BENCH_fl.json "
-              f"from this environment to arm the gate "
-              f"(--force-gate overrides)")
-
+def check_modes(base, fresh, gate_mode, tolerance, gate_armed) -> bool:
+    """Round-policy mode comparison; returns True on a gated regression."""
     failed = False
-    print(f"[bench-gate] tolerance {args.tolerance:.0%} on "
-          f"mode={args.mode!r} rounds_per_sec"
-          f"{' [armed]' if gate_armed else ' [informational]'}")
     print(f"{'mode':<14} {'base r/s':>10} {'fresh r/s':>10} {'delta':>8}  "
           f"{'base st/s':>10} {'fresh st/s':>10}")
     for mode in sorted(set(base) | set(fresh)):
@@ -99,18 +81,91 @@ def main() -> int:
             continue
         br, fr = b.get("rounds_per_sec", 0.0), f.get("rounds_per_sec", 0.0)
         bs, fs = b.get("steps_per_sec", 0.0), f.get("steps_per_sec", 0.0)
-        delta = (fr - br) / br if br else 0.0
-        gate = gate_armed and mode == args.mode
-        verdict = ""
-        if gate and br and delta < -args.tolerance:
-            failed = True
-            verdict = "  << REGRESSION"
+        delta, verdict, regressed = _gate_row(
+            br, fr, gate_armed and mode == gate_mode, tolerance)
+        failed = failed or regressed
         print(f"{mode:<14} {br:>10.3f} {fr:>10.3f} {delta:>+7.1%} "
               f"{bs:>10.0f} {fs:>10.0f}{verdict}")
-    if failed:
-        print(f"[bench-gate] FAIL: {args.mode} rounds/sec dropped more than "
-              f"{args.tolerance:.0%} vs the committed baseline.  If the "
-              f"slowdown is intended, refresh BENCH_fl.json "
+    return failed
+
+
+def check_frameworks(base_data, fresh_data, tolerance, gate_armed) -> bool:
+    """Per-framework serial rounds/sec diff table; True on a gated
+    regression in ANY framework.  Rows whose baseline/fresh round counts
+    differ (e.g. a full-mode baseline vs a --fast fresh run) are
+    informational — differently-amortized numbers are not comparable."""
+    base = base_data.get("frameworks") or {}
+    fresh = fresh_data.get("frameworks") or {}
+    names = sorted(set(base) | set(fresh))
+    if not names:
+        print("[bench-gate] no per-framework block in either file "
+              "-> frameworks comparison skipped")
+        return False
+    failed = False
+    print(f"{'framework':<14} {'base r/s':>10} {'fresh r/s':>10} "
+          f"{'delta':>8}")
+    for name in names:
+        b, f = base.get(name) or {}, fresh.get(name) or {}
+        br, fr = b.get("rounds_per_sec"), f.get("rounds_per_sec")
+        if br is None or fr is None:
+            print(f"{name:<14} {'-':>10} {'-':>10}     (rounds_per_sec "
+                  f"missing on one side; informational)")
+            continue
+        same_rounds = b.get("rounds") == f.get("rounds")
+        delta, verdict, regressed = _gate_row(
+            br, fr, gate_armed and same_rounds, tolerance)
+        failed = failed or regressed
+        if not same_rounds:
+            verdict = (f"     (round counts differ: {b.get('rounds')} vs "
+                       f"{f.get('rounds')}; informational)")
+        print(f"{name:<14} {br:>10.3f} {fr:>10.3f} {delta:>+7.1%}{verdict}")
+    return failed
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True, type=Path,
+                    help="committed BENCH_fl.json snapshot")
+    ap.add_argument("--fresh", required=True, type=Path,
+                    help="BENCH_fl.json written by the fast bench just now")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional rounds/sec drop (default 0.30)")
+    ap.add_argument("--mode", default="reference",
+                    help="round-policy mode the mode gate applies to")
+    ap.add_argument("--force-gate", action="store_true",
+                    help="hard-gate even when the env fingerprints differ")
+    args = ap.parse_args()
+
+    base_data = load_bench(args.baseline, "baseline")
+    fresh_data = load_bench(args.fresh, "fresh")
+    if base_data is None or fresh_data is None:
+        return 0
+
+    base_env = base_data.get("env")
+    fresh_env = fresh_data.get("env")
+    same_env = base_env is not None and base_env == fresh_env
+    gate_armed = same_env or args.force_gate
+    if not gate_armed:
+        print(f"[bench-gate] env fingerprint mismatch (baseline "
+              f"{base_env} vs fresh {fresh_env}) -> comparison is "
+              f"INFORMATIONAL; commit the freshly written BENCH_fl.json "
+              f"from this environment (or let the CI baseline cache "
+              f"re-arm on the next run; --force-gate overrides)")
+
+    print(f"[bench-gate] tolerance {args.tolerance:.0%} on "
+          f"mode={args.mode!r} + per-framework rounds_per_sec"
+          f"{' [armed]' if gate_armed else ' [informational]'}")
+    failed_modes = check_modes(base_data["modes"], fresh_data["modes"],
+                               args.mode, args.tolerance, gate_armed)
+    failed_fw = check_frameworks(base_data, fresh_data, args.tolerance,
+                                 gate_armed)
+    if failed_modes or failed_fw:
+        where = " and ".join(
+            w for w, f in ((f"mode {args.mode!r}", failed_modes),
+                           ("per-framework serial", failed_fw)) if f)
+        print(f"[bench-gate] FAIL: {where} rounds/sec dropped more than "
+              f"{args.tolerance:.0%} vs the baseline.  If the slowdown is "
+              f"intended, refresh BENCH_fl.json "
               f"(python -m benchmarks.run --fast --only fl_frameworks) and "
               f"commit it with the change.")
         return 1

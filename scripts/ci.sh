@@ -1,28 +1,35 @@
 #!/usr/bin/env sh
 # CI pipeline (also runnable locally):
-#   1. ruff lint (+ format drift report)    — style failures fail fast
+#   1. ruff lint + ruff format --check      — style/format drift fails fast
 #   2. non-slow, non-kernel test suite
 #   3. kernel parity under the Pallas interpreter
 #   4. fast FL-framework bench              — refreshes BENCH_fl.json +
 #                                             benchmarks/results/
 #   5. bench regression gate                — fresh --fast rounds/sec vs the
-#                                             committed BENCH_fl.json
+#                                             baseline (mode + per-framework)
 #
 #     sh scripts/ci.sh
 #
 # .github/workflows/ci.yml runs this on push/PR with a matrix over
 # REPRO_PALLAS_INTERPRET={0,1} and uploads the bench artifacts.
+#
+# Baseline selection for stage 5: $BENCH_BASELINE (a runner-cached
+# BENCH_fl.json restored by the workflow) when present — its env
+# fingerprint matches the runner, so the gate is ARMED on CI from the
+# second run on — else the committed BENCH_fl.json (armed locally, where
+# fingerprints match; informational on a different machine).  After the
+# run the fresh bench is copied back to $BENCH_BASELINE for the workflow
+# to re-cache.
 set -eu
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== ruff lint =="
+echo "== ruff lint + format =="
 if command -v ruff >/dev/null 2>&1; then
     ruff check .
-    # format drift is informational until the tree is ruff-format-adopted;
-    # the lint gate above is what fails the stage
-    ruff format --check . || echo "ruff format: drift (informational)"
+    # the tree is ruff-format-adopted: drift fails the stage
+    ruff format --check .
 else
     echo "ruff not installed; skipping lint stage" \
          "(pip install -r requirements-dev.txt)"
@@ -35,15 +42,43 @@ echo "== kernel parity (Pallas interpret mode) =="
 REPRO_PALLAS_INTERPRET=1 python -m pytest -q -m kernels
 
 echo "== benchmarks (fast, fl_frameworks) =="
-# snapshot the committed bench BEFORE the run rewrites BENCH_fl.json
+# snapshot the baselines BEFORE the run rewrites BENCH_fl.json
 # (rm first: a stale snapshot from another checkout must not arm the gate
-# against unrelated numbers when BENCH_fl.json is absent here)
+# against unrelated numbers when no baseline exists here)
 BASELINE="${TMPDIR:-/tmp}/bench_fl_baseline.json"
-rm -f "$BASELINE"
-cp BENCH_fl.json "$BASELINE" 2>/dev/null || true
+COMMITTED="${TMPDIR:-/tmp}/bench_fl_committed.json"
+rm -f "$BASELINE" "$COMMITTED"
+cp BENCH_fl.json "$COMMITTED" 2>/dev/null || true
+BASELINE_SRC=committed
+if [ -n "${BENCH_BASELINE:-}" ] && [ -f "${BENCH_BASELINE}" ]; then
+    echo "baseline: runner cache ${BENCH_BASELINE}"
+    cp "$BENCH_BASELINE" "$BASELINE"
+    BASELINE_SRC=cache
+else
+    echo "baseline: committed BENCH_fl.json"
+    cp "$COMMITTED" "$BASELINE" 2>/dev/null || true
+fi
 python -m benchmarks.run --fast --only fl_frameworks
 
 echo "== bench regression gate =="
-python scripts/check_bench_regression.py \
-    --baseline "$BASELINE" --fresh BENCH_fl.json \
-    --tolerance "${BENCH_TOLERANCE:-0.30}" --mode reference
+GATE="python scripts/check_bench_regression.py --fresh BENCH_fl.json \
+    --tolerance ${BENCH_TOLERANCE:-0.30} --mode reference"
+if ! $GATE --baseline "$BASELINE"; then
+    if [ "$BASELINE_SRC" = cache ]; then
+        # the documented remediation for an INTENDED slowdown is to
+        # refresh and commit BENCH_fl.json — honor it even though PR runs
+        # cannot update the runner cache (it saves on main pushes only):
+        # retry against the committed baseline before failing
+        echo "runner-cache gate failed; retrying vs committed" \
+             "BENCH_fl.json (refresh-and-commit remediation)"
+        $GATE --baseline "$COMMITTED"
+    else
+        exit 1
+    fi
+fi
+
+# hand the fresh bench back to the workflow's baseline cache
+if [ -n "${BENCH_BASELINE:-}" ]; then
+    mkdir -p "$(dirname "$BENCH_BASELINE")"
+    cp BENCH_fl.json "$BENCH_BASELINE"
+fi

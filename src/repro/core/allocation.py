@@ -27,12 +27,17 @@ from repro.core.cost import SystemParams, objective
 
 
 def solve_bandwidth(a: np.ndarray, E: int, sp: SystemParams) -> np.ndarray:
-    """Exact min-max bandwidth split for the selected set (fixed E)."""
+    """Exact min-max bandwidth split for the selected set (fixed E).
+
+    A client's achievable rate is ``b_m B G_m`` (``G_m`` = channel gain,
+    all-ones in the static model), so a faded client needs a larger share
+    for the same finish time — dividing its payload by ``G_m`` folds the
+    fade into the same equalization, exactly."""
     sel = np.where(a > 0)[0]
     b = np.zeros(sp.M)
     if len(sel) == 0:
         return b
-    size = sp.S_m[sel] + sp.omega * sp.d_model_bits       # bits
+    size = (sp.S_m[sel] + sp.omega * sp.d_model_bits) / sp.G_m[sel]  # bits
     offs = E * sp.Q_C[sel]                                # s
 
     def excess(tau: float) -> float:

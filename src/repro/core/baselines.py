@@ -28,6 +28,8 @@ framework runs sharing one SystemParams no longer corrupt each other.
 ``comm_quant`` (None / "bf16" / "int8" / ``CommQuant``) narrows the wire
 format of the aggregation payload; comm volume, latency, cost and the
 deadline/energy selection policies all account the quantized bits.
+``scenario`` (a ``repro.core.scenario.ScenarioTrace``) drives the round-t
+time-varying RAN state through selection, allocation and metrics.
 """
 from __future__ import annotations
 
@@ -37,8 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import engine
-from repro.core.cost import SystemParams, round_cost, total_time
+from repro.core import engine, scenario as scen
+from repro.core.cost import SystemParams, round_cost, round_energy, total_time
 from repro.core.engine import RoundMetrics
 
 
@@ -50,7 +52,7 @@ class _FLBase:
     def __init__(self, cfg: DNNConfig, sp: SystemParams, client_data,
                  test_data, lr: float, E: int, batch_size: int, seed: int,
                  K: int = 10, kernel_policy=None, comm_quant=None,
-                 interactive: bool = False):
+                 scenario=None, interactive: bool = False):
         self.cfg, self.E = cfg, E
         self.x = jnp.asarray(client_data["x"])
         self.y = jnp.asarray(client_data["y"])
@@ -61,6 +63,17 @@ class _FLBase:
         self.interactive = interactive
         self.sp, self.policy = engine.make_policy(
             self.framework, sp, cfg, seed=seed, K=K, E=E, quant=comm_quant)
+        # scenario: a pre-built ScenarioTrace (repro.core.scenario.make_trace
+        # / get_trace — the trainer has no round horizon to generate from);
+        # each run_round re-selects against the round-t trace
+        if isinstance(scenario, str):
+            raise TypeError(
+                "serial trainers need a concrete ScenarioTrace (the round "
+                "horizon is open-ended): build one with scenario.make_trace("
+                f"{scenario!r}, rounds, M) or run a scanned campaign")
+        self._trace = scenario
+        self._trace_base = (scen.capture_base(self.sp)
+                            if scenario is not None else None)
         self.key = jax.random.PRNGKey(seed)
         self._spec = engine.make_spec(self.framework, cfg, lr=lr,
                                       batch_size=batch_size,
@@ -79,7 +92,14 @@ class _FLBase:
                                              self.y_test)
 
     def run_round(self, eval_acc: bool = False) -> RoundMetrics:
+        if self._trace is not None:
+            # policy.sp IS self.sp (make_policy returns the shared derived
+            # copy), so the rewrite reaches the selection directly
+            scen.apply_round(self.sp, self._trace_base, self._trace,
+                             self._round)
         a, b, self.E = self.policy.step()
+        if self._trace is not None:
+            a = scen.realized_mask(a, self._trace, self._round)
         self.key, sub = jax.random.split(self.key)
         (self.params,), (loss,), self._qstate = self._round_fn(
             (self.params,), jnp.asarray(a, jnp.float32),
@@ -108,6 +128,7 @@ class _FLBase:
             comm_bits=self._spec.comm_model(a, self.E, self.sp),
             sim_time=total_time(a, b, self.E, self.sp),
             cost=round_cost(a, b, self.E, self.sp),
+            energy=round_energy(a, b, self.E, self.sp),
             client_loss=loss, accuracy=acc)
         self._round += 1
         self.history.append(m)

@@ -2,6 +2,15 @@
 
 All quantities are per global round; the optimization target is
 K_ε(E) · cost(t) with K_ε from Corollary 4.
+
+Time-varying RAN state (``repro.core.scenario``) enters through two
+per-client fields — ``G_m`` (channel gain multiplying the achievable
+uplink rate ``b_m B``) and ``avail`` (selection-time availability mask) —
+plus per-round rescaling of ``Q_C``/``Q_S``/``t_round``.  Both fields
+default to all-ones, so every static-path number is unchanged.
+``schedule_metrics`` evaluates eq. 18/20 latency/cost plus the EcoFL
+energy for a whole stacked ``(R, M)`` schedule × trace in one vectorized
+pass (the campaign runner's host-side metric path).
 """
 from __future__ import annotations
 
@@ -33,6 +42,10 @@ class SystemParams:
     # EcoFL-style per-client energy accounting (radio + CPU draw)
     p_tx_w: float = 0.2                # uplink transmit power (W)
     p_cpu_w: float = 5.0               # local-training compute power (W)
+    # time-varying RAN state (repro.core.scenario writes these per round;
+    # all-ones defaults keep the static path byte-identical)
+    G_m: np.ndarray = field(default=None, repr=False)    # channel gain on b_m B
+    avail: np.ndarray = field(default=None, repr=False)  # 1 = selectable
 
     def __post_init__(self):
         rng = np.random.default_rng(self.seed)
@@ -46,6 +59,10 @@ class SystemParams:
             # intermediate feature matrix bits per client (dataset-dependent,
             # overwritten by the trainer with the real size)
             self.S_m = np.full(self.M, 1e6)
+        if self.G_m is None:
+            self.G_m = np.ones(self.M)
+        if self.avail is None:
+            self.avail = np.ones(self.M)
 
     def copy(self) -> "SystemParams":
         """Independent copy (own arrays) — trainers derive omega/S_m/Q_* on
@@ -53,7 +70,7 @@ class SystemParams:
         SystemParams instance."""
         import copy as _copy
         new = _copy.copy(self)
-        for name in ("Q_C", "Q_S", "t_round", "S_m"):
+        for name in ("Q_C", "Q_S", "t_round", "S_m", "G_m", "avail"):
             arr = getattr(new, name)
             if arr is not None:
                 setattr(new, name, np.array(arr, copy=True))
@@ -76,9 +93,13 @@ def comp_cost(a: np.ndarray, E: int, sp: SystemParams) -> float:
 
 
 def uplink_time(a: np.ndarray, b: np.ndarray, sp: SystemParams) -> np.ndarray:
-    """eq. 19: T_co,m = (S_m + ω d) / (b_m B), for selected clients."""
+    """eq. 19: T_co,m = (S_m + ω d) / (b_m B G_m), for selected clients.
+
+    ``G_m`` is the per-client channel gain (all-ones in the static model):
+    a fade (G_m < 1) shrinks the achievable rate of the allocated share."""
     with np.errstate(divide="ignore"):
-        t = (sp.S_m + sp.omega * sp.d_model_bits) / np.maximum(b * sp.B, 1e-12)
+        t = (sp.S_m + sp.omega * sp.d_model_bits) \
+            / np.maximum(b * sp.B * sp.G_m, 1e-12)
     return np.where(a > 0, t, 0.0)
 
 
@@ -113,3 +134,41 @@ def round_energy(a: np.ndarray, b: np.ndarray, E: int,
     t_up = uplink_time(a, b, sp)
     return float(np.sum(a * (sp.p_tx_w * t_up
                              + sp.p_cpu_w * E * (sp.Q_C + sp.Q_S))))
+
+
+def schedule_metrics(a: np.ndarray, b: np.ndarray, E: np.ndarray,
+                     sp: SystemParams, trace=None):
+    """Eq. 18 latency, eq. 20 cost and the EcoFL energy for a whole stacked
+    schedule in ONE vectorized pass over trace × schedule.
+
+    ``a``/``b`` are ``(R, M)``, ``E`` is ``(R,)``; ``trace`` (a
+    ``repro.core.scenario.ScenarioTrace`` or None) supplies the per-round
+    channel gains and Q_C/Q_S/t_round rescalings — ``sp`` holds the BASE
+    (round-invariant) values.  With ``trace=None`` every row equals the
+    scalar ``total_time``/``round_cost``/``round_energy`` of that round,
+    so the campaign runner's metrics are identical to the serial
+    trainers'.  Returns ``(sim_time, cost, energy)``, each ``(R,)``.
+    """
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    E = np.asarray(E, np.float64)[:, None]                     # (R, 1)
+    if trace is None:
+        q_c, q_s, gain = sp.Q_C[None], sp.Q_S[None], sp.G_m[None]
+    else:
+        q_c = sp.Q_C[None] * trace.qc_scale
+        q_s = sp.Q_S[None] * trace.qs_scale
+        gain = sp.G_m[None] * trace.gain
+    size = sp.S_m[None] + sp.omega * sp.d_model_bits           # (1|R, M)
+    with np.errstate(divide="ignore"):
+        t_co = size / np.maximum(b * sp.B * gain, 1e-12)
+    t_co = np.where(a > 0, t_co, 0.0)
+    sel = a.sum(axis=1) > 0                                    # (R,)
+    t1 = np.max(np.where(a > 0, E * q_c + t_co, -np.inf), axis=1)
+    t2 = np.max(np.where(a > 0, E * q_s, -np.inf), axis=1)
+    sim = np.where(sel, t1 + t2, 0.0)
+    r_co = np.sum(a * b, axis=1) * sp.B * sp.p_c               # eq. 16
+    r_cp = np.sum(a * E * (q_c + q_s), axis=1) * sp.p_tr       # eq. 17
+    cost = sp.rho * (r_co / sp.B + r_cp) + (1 - sp.rho) * sim  # eq. 20
+    energy = np.sum(a * (sp.p_tx_w * t_co
+                         + sp.p_cpu_w * E * (q_c + q_s)), axis=1)
+    return sim, cost, energy

@@ -108,6 +108,7 @@ class RoundMetrics:
     comm_bits: float          # uplink volume this round (all selected)
     sim_time: float           # eq. 18 latency (s)
     cost: float               # eq. 20
+    energy: float = float("nan")   # EcoFL round energy (J), cost.round_energy
     # accuracy / losses may hold 0-d DEVICE arrays while a serial trainer
     # runs non-interactively (no per-round host sync); ``fetch_history``
     # resolves them to floats in one transfer at campaign end.
@@ -538,16 +539,29 @@ def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
 # ---------------------------------------------------------------------------
 
 class FixedKPolicy:
-    """FedAvg / vanilla SFL: K uniformly random clients, uniform bandwidth."""
+    """FedAvg / vanilla SFL: K uniformly random clients, uniform bandwidth.
+
+    Scenario availability (``sp.avail``) bounds the draw: only available
+    clients are candidates, and the cohort shrinks below K when fewer are
+    up.  The all-available case consumes the identical RNG stream as the
+    pre-scenario policy (parity-pinned)."""
 
     def __init__(self, sp: SystemParams, K: int, E: int, seed: int):
         self.sp, self.K, self.E = sp, K, E
         self.rng = np.random.default_rng(seed)
 
     def step(self) -> Tuple[np.ndarray, np.ndarray, int]:
+        cand = np.flatnonzero(self.sp.avail > 0)
         a = np.zeros(self.sp.M)
-        a[self.rng.choice(self.sp.M, self.K, replace=False)] = 1.0
-        b = np.where(a > 0, 1.0 / self.K, 0.0)
+        if cand.size == self.sp.M:
+            a[self.rng.choice(self.sp.M, self.K, replace=False)] = 1.0
+            k = self.K
+        else:
+            if cand.size == 0:            # total blackout: never stall
+                cand = np.arange(self.sp.M)
+            k = min(self.K, cand.size)
+            a[self.rng.choice(cand, k, replace=False)] = 1.0
+        b = np.where(a > 0, 1.0 / k, 0.0)
         return a, b, self.E
 
 
@@ -593,6 +607,11 @@ class FedORAPolicy:
     def step(self) -> Tuple[np.ndarray, np.ndarray, int]:
         sp, E = self.sp, self.E
         order = np.argsort(E * (sp.Q_C + sp.Q_S), kind="stable")
+        # the RIC only considers clients it can reach this round (scenario
+        # availability); all-available keeps the original candidate order
+        order = order[sp.avail[order] > 0]
+        if order.size == 0:
+            order = np.argsort(E * (sp.Q_C + sp.Q_S), kind="stable")
         a = np.zeros(sp.M)
         b = np.zeros(sp.M)
         for m in order:
@@ -625,11 +644,18 @@ class EcoFLPolicy:
 
     def step(self) -> Tuple[np.ndarray, np.ndarray, int]:
         sp = self.sp
-        t_up_est = (sp.S_m + sp.omega * sp.d_model_bits) / (sp.B / self.K)
+        t_up_est = (sp.S_m + sp.omega * sp.d_model_bits) \
+            / ((sp.B / self.K) * sp.G_m)
         energy = (sp.p_tx_w * t_up_est
                   + sp.p_cpu_w * self.E * (sp.Q_C + sp.Q_S))
+        # unavailable clients rank last (scenario availability); the cohort
+        # shrinks below K when fewer are up, and a total blackout falls back
+        # to the plain energy ranking (never stall)
+        if np.any(sp.avail > 0):
+            energy = np.where(sp.avail > 0, energy, np.inf)
+        k = max(1, min(self.K, int(np.sum(np.isfinite(energy)))))
         a = np.zeros(sp.M)
-        a[np.argsort(energy, kind="stable")[:self.K]] = 1.0
+        a[np.argsort(energy, kind="stable")[:k]] = 1.0
         b = solve_bandwidth(a, self.E, sp)
         return a, b, self.E
 

@@ -1,0 +1,311 @@
+"""Time-varying O-RAN scenario engine — named generators of per-round RAN
+traces plus tunable data heterogeneity.
+
+The paper's system model (and every run before this subsystem) freezes the
+network at ``SystemParams.__post_init__`` time: per-client compute, rates
+and deadlines are drawn once, so the deadline-aware selection (§IV, Alg. 1)
+only ever sees a static snapshot.  Real O-RAN state is anything but static
+— channels fade, devices straggle and drop out, RIC control loops jitter —
+and the resource-management baselines this repo grew (FedORA's RIC
+allocation, EcoFL's energy ranking) are motivated precisely by that
+dynamism.  A ``ScenarioTrace`` supplies the missing axis:
+
+* ``gain``      (R, M) — AR(1) log-normal channel fade multiplying each
+                 client's achievable uplink rate ``b_m B`` (``SystemParams
+                 .G_m``),
+* ``qc_scale``/``qs_scale`` (R, M) — AR(1) compute-time fade of ``Q_C`` /
+                 ``Q_S`` (background load on the device / server),
+* ``avail``     (R, M) — 2-state Markov (Gilbert-Elliott) availability the
+                 RIC observes at selection time (``SystemParams.avail``),
+* ``drop``      (R, M) — mid-round survival mask UNKNOWN at selection: a
+                 selected client that drops contributes nothing to the
+                 aggregation (the realized schedule mask is ``a * drop``),
+* ``deadline_scale`` (R, M) — jitter on the slice deadlines ``t_round``,
+* ``data_alpha`` — Dirichlet(α) concentration for the client partition
+                 (``repro.data.oran.partition_dirichlet``); None keeps the
+                 paper's one-class-per-client split.
+
+Everything is drawn up front from ONE scenario seed (`make_trace` is
+deterministic), so traces precompute host-side exactly like schedules do:
+the policies re-select each round against the round-t trace
+(``apply_round`` rescales the framework's derived SystemParams copy in
+place), the realized per-round masks become ``lax.scan`` operands of the
+scanned campaign (zero per-round host syncs — the transfer-guard test runs
+with scenarios on), and latency/cost/energy vectorize over trace ×
+schedule (``repro.core.cost.schedule_metrics``).
+
+Registry: ``static`` | ``fading`` | ``straggler`` | ``noniid``.  A name
+may carry a level suffix — ``"fading:0.8"`` (fade depth σ),
+``"straggler:0.4"`` (blackout probability), ``"noniid:0.1"`` (Dirichlet
+α).  ``static`` is all-ones: schedules, metrics and selection are
+byte-identical to runs that never heard of scenarios.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.cost import SystemParams
+
+
+@dataclass(frozen=True)
+class ScenarioTrace:
+    """Device-external RAN state for ``rounds`` rounds × M clients, drawn
+    deterministically from ``(name, level, seed)``."""
+    name: str
+    seed: int
+    gain: np.ndarray            # (R, M) channel gain on the uplink rate
+    qc_scale: np.ndarray        # (R, M) multiplier on Q_C
+    qs_scale: np.ndarray        # (R, M) multiplier on Q_S
+    avail: np.ndarray           # (R, M) 1 = selectable this round
+    drop: np.ndarray            # (R, M) 1 = survives the round if selected
+    deadline_scale: np.ndarray  # (R, M) multiplier on t_round
+    data_alpha: Optional[float] = None   # Dirichlet α (None = seed split)
+    level: Optional[float] = None
+
+    @property
+    def rounds(self) -> int:
+        return int(self.gain.shape[0])
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.gain.shape[1])
+
+    def is_static(self) -> bool:
+        """True when every trace channel is the all-ones constant (the
+        schedule planner then skips per-round SystemParams rewrites)."""
+        return all(np.all(arr == 1.0) for arr in (
+            self.gain, self.qc_scale, self.qs_scale, self.avail, self.drop,
+            self.deadline_scale))
+
+
+@dataclass
+class TraceBase:
+    """Round-invariant SystemParams arrays captured AFTER the framework's
+    derivation (``engine.make_policy``) — ``apply_round`` rescales these,
+    never the already-rescaled values (no compounding across rounds)."""
+    Q_C: np.ndarray
+    Q_S: np.ndarray
+    t_round: np.ndarray
+    G_m: np.ndarray
+    avail: np.ndarray
+
+
+def capture_base(sp: SystemParams) -> TraceBase:
+    return TraceBase(Q_C=sp.Q_C.copy(), Q_S=sp.Q_S.copy(),
+                     t_round=sp.t_round.copy(), G_m=sp.G_m.copy(),
+                     avail=sp.avail.copy())
+
+
+def apply_round(sp: SystemParams, base: TraceBase, trace: ScenarioTrace,
+                t: int) -> SystemParams:
+    """Write round ``t``'s RAN state into ``sp`` (the policy's private
+    derived copy) so the next ``policy.step()`` selects/allocates against
+    the round-t trace.  Returns ``sp`` for chaining."""
+    if t >= trace.rounds:
+        raise ValueError(
+            f"round {t} is past the scenario trace horizon "
+            f"({trace.rounds} rounds, scenario {trace.name!r}); build a "
+            f"longer trace with scenario.make_trace")
+    sp.Q_C = base.Q_C * trace.qc_scale[t]
+    sp.Q_S = base.Q_S * trace.qs_scale[t]
+    sp.t_round = base.t_round * trace.deadline_scale[t]
+    sp.G_m = base.G_m * trace.gain[t]
+    sp.avail = base.avail * trace.avail[t]
+    return sp
+
+
+def restore_base(sp: SystemParams, base: TraceBase) -> SystemParams:
+    """Undo ``apply_round``: put the round-invariant arrays back so the
+    caller's SystemParams does not dangle at the last applied round."""
+    sp.Q_C, sp.Q_S = base.Q_C.copy(), base.Q_S.copy()
+    sp.t_round = base.t_round.copy()
+    sp.G_m, sp.avail = base.G_m.copy(), base.avail.copy()
+    return sp
+
+
+def realized_mask(a: np.ndarray, trace: ScenarioTrace, t: int) -> np.ndarray:
+    """Fold round ``t``'s mid-round dropout into the selected mask.  The
+    policy allocated for ``a``; clients that drop contribute nothing to the
+    aggregation (mask 0 on the device).  If EVERY selected client drops,
+    the first selected one is kept — an all-zero mask would zero the
+    masked-FedAvg aggregation, and a round that trains nobody stalls the
+    campaign for no modeling gain."""
+    a_real = a * trace.drop[t]
+    if a_real.sum() == 0 and a.sum() > 0:
+        a_real = np.zeros_like(a)
+        a_real[np.argmax(a > 0)] = 1.0
+    return a_real
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+def _ar1(rng: np.random.Generator, rounds: int, m: int, rho: float,
+         sigma: float) -> np.ndarray:
+    """Stationary AR(1) (Gauss-Markov) series per client: x_0 ~ N(0, σ²),
+    x_t = ρ x_{t-1} + σ√(1-ρ²) ε_t — marginals stay N(0, σ²) forever."""
+    eps = rng.normal(size=(rounds, m))
+    x = np.empty((rounds, m))
+    x[0] = sigma * eps[0]
+    innov = sigma * np.sqrt(max(1.0 - rho * rho, 0.0))
+    for t in range(1, rounds):
+        x[t] = rho * x[t - 1] + innov * eps[t]
+    return x
+
+
+def _markov_onoff(rng: np.random.Generator, rounds: int, m: int,
+                  p_fail: float, p_recover: float) -> np.ndarray:
+    """Gilbert-Elliott 2-state availability chain per client, started from
+    the stationary distribution."""
+    p_down = p_fail / max(p_fail + p_recover, 1e-12)
+    up = np.empty((rounds, m))
+    up[0] = (rng.random(m) >= p_down).astype(np.float64)
+    for t in range(1, rounds):
+        u = rng.random(m)
+        stay_up = up[t - 1] * (u >= p_fail)
+        come_up = (1.0 - up[t - 1]) * (u < p_recover)
+        up[t] = (stay_up + come_up > 0).astype(np.float64)
+    return up
+
+
+def _ones(rounds: int, m: int) -> np.ndarray:
+    return np.ones((rounds, m))
+
+
+def _gen_static(rounds: int, m: int, seed: int,
+                level: Optional[float] = None) -> Dict[str, np.ndarray]:
+    return {}
+
+
+def _gen_fading(rounds: int, m: int, seed: int,
+                level: Optional[float] = None) -> Dict[str, np.ndarray]:
+    """Markov (AR(1)) log-normal fading of the per-client uplink gain plus
+    milder correlated compute fade and deadline jitter.  ``level`` is the
+    log-fade σ (default 0.5 ≈ occasional 3-4× rate drops)."""
+    sigma = 0.5 if level is None else float(level)
+    rng = np.random.default_rng(seed)
+    gain = np.exp(_ar1(rng, rounds, m, rho=0.8, sigma=sigma))
+    qc = np.exp(np.abs(_ar1(rng, rounds, m, rho=0.9, sigma=0.25)))
+    qs = np.exp(np.abs(_ar1(rng, rounds, m, rho=0.9, sigma=0.25)))
+    deadline = np.exp(_ar1(rng, rounds, m, rho=0.5, sigma=0.08))
+    return {"gain": gain, "qc_scale": qc, "qs_scale": qs,
+            "deadline_scale": deadline}
+
+
+def _gen_straggler(rounds: int, m: int, seed: int,
+                   level: Optional[float] = None) -> Dict[str, np.ndarray]:
+    """Straggler / dropout dynamics: a persistent slow cohort (3× compute),
+    Gilbert-Elliott availability blackouts the RIC sees at selection time,
+    and rare mid-round dropouts it does not.  ``level`` is the blackout
+    entry probability (default 0.25)."""
+    p_fail = 0.25 if level is None else float(level)
+    rng = np.random.default_rng(seed)
+    slow = rng.random(m) < 0.3                       # persistent stragglers
+    qc = np.where(slow, 3.0, 1.0)[None] * np.exp(
+        np.abs(_ar1(rng, rounds, m, rho=0.9, sigma=0.2)))
+    qs = np.exp(np.abs(_ar1(rng, rounds, m, rho=0.9, sigma=0.2)))
+    avail = _markov_onoff(rng, rounds, m, p_fail=p_fail, p_recover=0.5)
+    drop = (rng.random((rounds, m)) >= 0.05).astype(np.float64)
+    return {"qc_scale": qc, "qs_scale": qs, "avail": avail, "drop": drop}
+
+
+def _gen_noniid(rounds: int, m: int, seed: int,
+                level: Optional[float] = None) -> Dict[str, np.ndarray]:
+    """Static RAN, heterogeneous DATA: Dirichlet(α) client partition.
+    ``level`` is α (default 0.3); α→∞ approaches IID, α→0 recovers the
+    paper's one-class-per-client split."""
+    alpha = 0.3 if level is None else float(level)
+    return {"data_alpha": alpha}
+
+
+_REGISTRY: Dict[str, Callable[..., Dict[str, np.ndarray]]] = {
+    "static": _gen_static,
+    "fading": _gen_fading,
+    "straggler": _gen_straggler,
+    "noniid": _gen_noniid,
+}
+
+ScenarioLike = Union[None, str, ScenarioTrace]
+
+
+def scenario_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def make_trace(name: str, rounds: int, n_clients: int, *,
+               seed: int = 0, level: Optional[float] = None
+               ) -> ScenarioTrace:
+    """Build the named scenario's trace for ``rounds`` × ``n_clients``.
+    Deterministic in ``(name, level, seed)``; unset channels default to the
+    all-ones constant."""
+    base, _, suffix = name.partition(":")
+    if suffix:
+        if level is not None:
+            raise ValueError(f"level given twice: {name!r} and {level}")
+        level = float(suffix)
+    try:
+        gen = _REGISTRY[base]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; have "
+                       f"{scenario_names()}") from None
+    ch = gen(rounds, n_clients, seed, level=level)
+    ones = _ones(rounds, n_clients)
+    return ScenarioTrace(
+        name=base, seed=seed, level=level,
+        gain=ch.get("gain", ones).copy(),
+        qc_scale=ch.get("qc_scale", ones).copy(),
+        qs_scale=ch.get("qs_scale", ones).copy(),
+        avail=ch.get("avail", ones).copy(),
+        drop=ch.get("drop", ones).copy(),
+        deadline_scale=ch.get("deadline_scale", ones).copy(),
+        data_alpha=ch.get("data_alpha"))
+
+
+def get_trace(scenario: ScenarioLike, rounds: int, n_clients: int, *,
+              seed: int = 0) -> Optional[ScenarioTrace]:
+    """Resolve a scenario argument: None → None (static fast path), a name
+    (optionally ``"name:level"``) → ``make_trace``, a ``ScenarioTrace`` →
+    validated pass-through (it must cover at least ``rounds`` rounds ×
+    exactly ``n_clients`` clients; a longer trace is truncated to its
+    first ``rounds`` rounds — the prefix a shorter campaign would see)."""
+    if scenario is None:
+        return None
+    if isinstance(scenario, str):
+        return make_trace(scenario, rounds, n_clients, seed=seed)
+    if not isinstance(scenario, ScenarioTrace):
+        raise TypeError(f"scenario must be None, a name or a ScenarioTrace, "
+                        f"got {type(scenario).__name__}")
+    if scenario.n_clients != n_clients:
+        raise ValueError(f"trace covers {scenario.n_clients} clients, "
+                         f"need {n_clients}")
+    if scenario.rounds < rounds:
+        raise ValueError(f"trace covers {scenario.rounds} rounds, "
+                         f"need {rounds}")
+    if scenario.rounds > rounds:
+        return ScenarioTrace(
+            name=scenario.name, seed=scenario.seed, level=scenario.level,
+            gain=scenario.gain[:rounds],
+            qc_scale=scenario.qc_scale[:rounds],
+            qs_scale=scenario.qs_scale[:rounds],
+            avail=scenario.avail[:rounds], drop=scenario.drop[:rounds],
+            deadline_scale=scenario.deadline_scale[:rounds],
+            data_alpha=scenario.data_alpha)
+    return scenario
+
+
+def partition_for(trace: Optional[ScenarioTrace], X: np.ndarray,
+                  y: np.ndarray, n_clients: int, samples_per_client: int,
+                  seed: int = 0) -> Dict[str, np.ndarray]:
+    """The client partition a scenario asks for: Dirichlet(α) when the
+    trace carries ``data_alpha``, the paper's one-class-per-client split
+    otherwise (same as every pre-scenario run)."""
+    from repro.data import oran
+    if trace is not None and trace.data_alpha is not None:
+        return oran.partition_dirichlet(X, y, n_clients, samples_per_client,
+                                        alpha=trace.data_alpha, seed=seed)
+    return oran.partition_non_iid(X, y, n_clients, samples_per_client,
+                                  seed=seed)

@@ -28,13 +28,20 @@ def initial_state(sp: SystemParams) -> SelectionState:
 
 def select_trainers(E: int, sp: SystemParams,
                     state: SelectionState) -> np.ndarray:
-    """Returns the binary selection vector a_t (Alg. 1 lines 2-7)."""
+    """Returns the binary selection vector a_t (Alg. 1 lines 2-7).
+
+    Clients with ``sp.avail == 0`` (scenario dropouts / straggler blackout,
+    known to the RIC at selection time) are never admitted; the all-ones
+    default reproduces the static model exactly."""
     t_estimate = sp.alpha * state.t_max_k + (1 - sp.alpha) * state.t_max_km1
     t_overall = E * (sp.Q_C + sp.Q_S) + t_estimate
-    a = (t_overall <= sp.t_round).astype(np.float64)
+    a = ((t_overall <= sp.t_round) & (sp.avail > 0)).astype(np.float64)
     if a.sum() == 0:
-        # never stall: admit the single fastest client
-        a[np.argmin(E * (sp.Q_C + sp.Q_S) - sp.t_round)] = 1.0
+        # never stall: admit the single fastest (available) client
+        slack = E * (sp.Q_C + sp.Q_S) - sp.t_round
+        if np.any(sp.avail > 0):
+            slack = np.where(sp.avail > 0, slack, np.inf)
+        a[np.argmin(slack)] = 1.0
     return a
 
 

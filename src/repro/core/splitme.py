@@ -27,8 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import dnn, engine
-from repro.core.cost import SystemParams, round_cost, total_time
+from repro.core import dnn, engine, scenario as scen
+from repro.core.cost import SystemParams, round_cost, round_energy, total_time
 from repro.core.engine import RoundMetrics  # re-export (seed import path)
 from repro.core.engine import fetch_history
 from repro.core.inversion import invert_inverse_model
@@ -45,7 +45,7 @@ class SplitMeTrainer:
                  lr_c: float = 0.05, lr_s: float = 0.02,
                  temperature: float = 2.0, batch_size: int = 32,
                  e_initial: int = 20, gamma: float = 1e-3, seed: int = 0,
-                 kernel_policy=None, comm_quant=None,
+                 kernel_policy=None, comm_quant=None, scenario=None,
                  interactive: bool = False):
         assert lr_c > lr_s, "Corollary 3: η_C > η_S (B_1 < B_2)"
         self.cfg = cfg
@@ -64,6 +64,17 @@ class SplitMeTrainer:
         self.sp, self.policy = engine.make_policy(
             "splitme", sp, cfg, e_initial=e_initial,
             n_samples_per_client=int(self.x.shape[1]), quant=comm_quant)
+        # scenario: a pre-built ScenarioTrace (repro.core.scenario); each
+        # run_round rewrites the derived copy to the round-t RAN state
+        # before Alg. 1 / P2 re-select and re-allocate
+        if isinstance(scenario, str):
+            raise TypeError(
+                "SplitMeTrainer needs a concrete ScenarioTrace (the round "
+                "horizon is open-ended): build one with scenario.make_trace("
+                f"{scenario!r}, rounds, M) or run a scanned campaign")
+        self._trace = scenario
+        self._trace_base = (scen.capture_base(self.sp)
+                            if scenario is not None else None)
         self.key = jax.random.PRNGKey(seed)
         self._spec = engine.make_spec(
             "splitme", cfg, lr_c=lr_c, lr_s=lr_s, temperature=temperature,
@@ -92,8 +103,12 @@ class SplitMeTrainer:
     # ------------------------------------------------------------------
     def run_round(self, eval_acc: bool = False) -> RoundMetrics:
         sp = self.sp
+        if self._trace is not None:
+            scen.apply_round(sp, self._trace_base, self._trace, self._round)
         # P1 + P2: deadline-aware selection, bandwidth, adaptive E
         a, b, self.E = self.policy.step()
+        if self._trace is not None:
+            a = scen.realized_mask(a, self._trace, self._round)
 
         self.key, sub = jax.random.split(self.key)
         self.w_c, self.w_s_inv, closs, sloss = self._jit_round(
@@ -107,6 +122,7 @@ class SplitMeTrainer:
             comm_bits=self._spec.comm_model(a, self.E, sp),
             sim_time=total_time(a, b, self.E, sp),
             cost=round_cost(a, b, self.E, sp),
+            energy=round_energy(a, b, self.E, sp),
             client_loss=float(closs) if self.interactive else closs,
             server_loss=float(sloss) if self.interactive else sloss)
         if eval_acc:

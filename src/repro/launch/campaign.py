@@ -41,6 +41,13 @@ Multi-config campaigns: ``run_config_sweep`` vmaps over SystemParams
 variants sharing one (rounds, M) schedule shape — one compiled scan trains
 every (variant, seed) pair and the whole sweep performs a single host
 transfer.
+
+Time-varying scenarios (``repro.core.scenario``) slot straight into this
+architecture because traces, like schedules, are parameter-independent and
+precomputable: ``plan_schedule(scenario=...)`` re-selects each round
+against the round-t trace, the realized masks/E become the scan operands,
+and latency/cost/energy vectorize over trace × schedule — a fading or
+straggler campaign is still one compiled scan with one host transfer.
 """
 from __future__ import annotations
 
@@ -53,8 +60,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import engine
-from repro.core.cost import SystemParams, round_cost, total_time
+from repro.core import engine, scenario as scen
+from repro.core.cost import SystemParams, schedule_metrics
 from repro.core.engine import RoundMetrics
 
 # Device→host transfer accounting: every metrics pull in this module goes
@@ -86,10 +93,15 @@ def _init_qstate(spec, params, mesh=None):
 
 @dataclass
 class RoundSchedule:
-    """Precomputed system-side trajectory, shared by every seed."""
-    a: np.ndarray      # (R, M) binary selection masks
+    """Precomputed system-side trajectory, shared by every seed.
+
+    With a scenario, ``a`` is the REALIZED per-round mask — the policy's
+    selection (made against the round-t trace) times the mid-round survival
+    mask — and ``trace`` carries the trace the metrics vectorize over."""
+    a: np.ndarray      # (R, M) binary selection masks (trace-realized)
     b: np.ndarray      # (R, M) bandwidth fractions
     E: np.ndarray      # (R,)   local-update counts
+    trace: Optional[scen.ScenarioTrace] = None
 
     @property
     def rounds(self) -> int:
@@ -117,23 +129,45 @@ def plan_schedule(framework: str, sp: SystemParams, cfg: DNNConfig,
                   rounds: int, *, policy_seed: int = 0, K: int = 10,
                   E: int = 10, e_initial: int = 20,
                   n_samples_per_client: Optional[int] = None,
-                  quant=None) -> Tuple[SystemParams, RoundSchedule]:
+                  quant=None, scenario: scen.ScenarioLike = None,
+                  scenario_seed: int = 0
+                  ) -> Tuple[SystemParams, RoundSchedule]:
     """Run the framework's host-side policy for `rounds` rounds.
 
     Returns the framework's derived SystemParams copy and the schedule.
     ``quant`` (a ``CommQuant`` / mode name) scales the wire payloads the
     policy optimizes over, so deadline/energy selection responds to the
     quantized format.
+
+    ``scenario`` (None / a registry name like ``"fading"`` /
+    ``"straggler:0.4"`` / a ``ScenarioTrace``) makes the plan TIME-VARYING:
+    each round the trace's channel gains, compute scales, deadline jitter
+    and availability are written into the derived copy before the policy
+    re-selects, and the recorded mask is the REALIZED one (selection ×
+    mid-round survival).  The returned SystemParams carries the
+    round-invariant base values (the schedule's trace rides on
+    ``RoundSchedule.trace``).
     """
     sp, policy = engine.make_policy(
         framework, sp, cfg, seed=policy_seed, K=K, E=E, e_initial=e_initial,
         n_samples_per_client=n_samples_per_client, quant=quant)
+    trace = scen.get_trace(scenario, rounds, sp.M, seed=scenario_seed)
+    # an all-ones trace (e.g. "static", or "noniid" whose action is purely
+    # data-side) needs no per-round SystemParams rewrites
+    dynamic = trace is not None and not trace.is_static()
+    base = scen.capture_base(sp) if dynamic else None
     a_l, b_l, e_l = [], [], []
-    for _ in range(rounds):
+    for t in range(rounds):
+        if dynamic:
+            scen.apply_round(sp, base, trace, t)
         a, b, e = policy.step()
+        if dynamic:
+            a = scen.realized_mask(a, trace, t)
         a_l.append(a), b_l.append(b), e_l.append(e)
+    if dynamic:
+        scen.restore_base(sp, base)
     return sp, RoundSchedule(a=np.stack(a_l), b=np.stack(b_l),
-                             E=np.asarray(e_l, np.int32))
+                             E=np.asarray(e_l, np.int32), trace=trace)
 
 
 def _bucket_cohorts(values, cap: int, max_exact: int = 8) -> Dict[int, int]:
@@ -154,17 +188,17 @@ def _bucket_cohorts(values, cap: int, max_exact: int = 8) -> Dict[int, int]:
 
 
 def _schedule_system_metrics(spec, sched: RoundSchedule, sp: SystemParams):
-    """All schedule-derived metrics for every round in one vectorized pass —
-    comm_bits via the spec's stacked-schedule comm_model — so no per-round
-    host arithmetic (and nothing here) ever depends on a device pull."""
+    """All schedule-derived metrics for every round in one vectorized pass
+    over trace × schedule — comm_bits via the spec's stacked-schedule
+    comm_model, latency/cost/energy via ``cost.schedule_metrics`` (which
+    reads the schedule's ScenarioTrace, if any) — so no per-round host
+    arithmetic (and nothing here) ever depends on a device pull."""
     comm = np.atleast_1d(np.asarray(
         spec.comm_model(sched.a, sched.E, sp), np.float64))
     nsel = sched.a.sum(axis=1).astype(int)
-    sim = np.array([total_time(sched.a[r], sched.b[r], int(sched.E[r]), sp)
-                    for r in range(sched.rounds)])
-    cost = np.array([round_cost(sched.a[r], sched.b[r], int(sched.E[r]), sp)
-                     for r in range(sched.rounds)])
-    return comm, nsel, sim, cost
+    sim, cost, energy = schedule_metrics(sched.a, sched.b, sched.E, sp,
+                                         trace=sched.trace)
+    return comm, nsel, sim, cost, energy
 
 
 def _plan_segments(kb_r: Sequence[int], eb_r: Sequence[int]
@@ -180,7 +214,7 @@ def _plan_segments(kb_r: Sequence[int], eb_r: Sequence[int]
     return segs
 
 
-def _make_metrics(sched, comm, nsel, sim, cost, losses, acc_rounds
+def _make_metrics(sched, comm, nsel, sim, cost, energy, losses, acc_rounds
                   ) -> List[RoundMetrics]:
     metrics = []
     for r in range(sched.rounds):
@@ -190,7 +224,7 @@ def _make_metrics(sched, comm, nsel, sim, cost, losses, acc_rounds
         metrics.append(RoundMetrics(
             round=r, n_selected=int(nsel[r]), E=int(sched.E[r]),
             comm_bits=float(comm[r]), sim_time=float(sim[r]),
-            cost=float(cost[r]), accuracy=acc_r,
+            cost=float(cost[r]), energy=float(energy[r]), accuracy=acc_r,
             client_loss=float(losses[:, r, 0].mean()),
             server_loss=float(losses[:, r, 1].mean())
             if losses.shape[-1] > 1 else float("nan")))
@@ -204,7 +238,9 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
                  policy_seed: Optional[int] = None, scan: bool = True,
                  mesh=None, eval_every: Optional[int] = None,
                  eval_gamma: float = 1e-3, strict_transfers: bool = False,
-                 policy=None, quant=None, **hyper) -> CampaignResult:
+                 policy=None, quant=None,
+                 scenario: scen.ScenarioLike = None,
+                 scenario_seed: int = 0, **hyper) -> CampaignResult:
     """Train `len(seeds)` independent runs of `framework` in one compiled
     scan-over-rounds, vmapped over the seed axis.
 
@@ -236,6 +272,19 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
     (int8 carries a per-seed error-feedback accumulator through the scan),
     and comm_bits / latency / cost / the schedule's selection all account
     the quantized bits.
+
+    ``scenario`` (None / a ``repro.core.scenario`` registry name like
+    ``"fading"`` / ``"straggler:0.4"`` / a ``ScenarioTrace``) runs the
+    campaign against a TIME-VARYING RAN: the schedule is planned round by
+    round against the trace (selection/allocation see the round-t channel
+    gains, compute scales, deadline jitter and availability; mid-round
+    dropouts zero the realized mask), and comm_bits / latency / cost /
+    energy vectorize over trace × schedule.  The trace-realized per-round
+    masks/E become the ``lax.scan`` operands of the scanned campaign, so a
+    scenario campaign still compiles to the same scans with ONE host
+    transfer (``strict_transfers`` holds with scenarios on).  Note the
+    caller partitions ``client_data`` — for a ``noniid`` scenario build it
+    with ``scenario.partition_for`` (Dirichlet α rides on the trace).
     """
     x = jnp.asarray(client_data["x"])
     y = jnp.asarray(client_data["y"])
@@ -249,7 +298,8 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
         policy_seed = min(seeds)
     sp, sched = plan_schedule(framework, sp, cfg, rounds, K=K, E=E,
                               e_initial=e_initial, policy_seed=policy_seed,
-                              n_samples_per_client=n_m, quant=quant)
+                              n_samples_per_client=n_m, quant=quant,
+                              scenario=scenario, scenario_seed=scenario_seed)
     # masked_loss_metric: average losses over the executed steps only, so a
     # round's scan can be exactly E_t steps long.  Trained params are
     # identical to the serial trainers (masked updates are exact no-ops);
@@ -257,7 +307,7 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
     # over the full E_max scan.
     spec = engine.make_spec(framework, cfg, masked_loss_metric=True,
                             policy=policy, quant=quant, **hyper)
-    comm, nsel, sim, cost = _schedule_system_metrics(spec, sched, sp)
+    comm, nsel, sim, cost, energy = _schedule_system_metrics(spec, sched, sp)
 
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -275,8 +325,8 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
         result = CampaignResult(
             framework=framework, seeds=tuple(seeds), schedule=sched,
             params=params, losses=losses,
-            metrics=_make_metrics(sched, comm, nsel, sim, cost, losses,
-                                  None))
+            metrics=_make_metrics(sched, comm, nsel, sim, cost, energy,
+                                  losses, None))
         if test_data is not None:
             result.accuracy = evaluate_campaign(
                 result, cfg, test_data, client_data=client_data,
@@ -306,7 +356,7 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
     result = CampaignResult(
         framework=framework, seeds=tuple(seeds), schedule=sched,
         params=params, losses=losses,
-        metrics=_make_metrics(sched, comm, nsel, sim, cost, losses,
+        metrics=_make_metrics(sched, comm, nsel, sim, cost, energy, losses,
                               acc_rounds if test_data is not None else None),
         accuracy_per_round=acc_rounds if test_data is not None else None)
     if test_data is not None:
@@ -513,7 +563,8 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
                      eval_gamma: float = 1e-3,
                      eval_every: Optional[int] = None, mesh=None,
                      strict_transfers: bool = False, policy=None,
-                     quant=None, **hyper) -> List[CampaignResult]:
+                     quant=None, scenario: scen.ScenarioLike = None,
+                     scenario_seed: int = 0, **hyper) -> List[CampaignResult]:
     """Multi-config campaign over SystemParams variants.
 
     With ``vmap_configs=True`` (default) every variant's schedule shares
@@ -531,7 +582,8 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
                              e_initial=e_initial, policy_seed=policy_seed,
                              eval_gamma=eval_gamma, eval_every=eval_every,
                              mesh=mesh, strict_transfers=strict_transfers,
-                             policy=policy, quant=quant, **hyper)
+                             policy=policy, quant=quant, scenario=scenario,
+                             scenario_seed=scenario_seed, **hyper)
                 for sp in system_params]
     if mesh is not None:
         raise ValueError("mesh (sharded rounds) requires vmap_configs=False")
@@ -543,7 +595,8 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
         policy_seed = min(seeds)
     planned = [plan_schedule(framework, sp, cfg, rounds, K=K, E=E,
                              e_initial=e_initial, policy_seed=policy_seed,
-                             n_samples_per_client=n_m, quant=quant)
+                             n_samples_per_client=n_m, quant=quant,
+                             scenario=scenario, scenario_seed=scenario_seed)
                for sp in system_params]
     for sp_d, _ in planned:
         if sp_d.M != x.shape[0]:
@@ -615,14 +668,14 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
     for v in range(V):
         losses = np.transpose(host["loss"][:, v], (1, 0, 2))  # (S, R, n_ph)
         acc_rounds = np.asarray(host["acc"][:, v])            # (R, S)
-        comm, nsel, sim, cost = _schedule_system_metrics(
+        comm, nsel, sim, cost, energy = _schedule_system_metrics(
             spec, scheds[v], sps[v])
         res = CampaignResult(
             framework=framework, seeds=tuple(seeds), schedule=scheds[v],
             params=jax.tree.map(lambda p: p[v], params), losses=losses,
             metrics=_make_metrics(
                 sched=scheds[v], comm=comm, nsel=nsel, sim=sim, cost=cost,
-                losses=losses,
+                energy=energy, losses=losses,
                 acc_rounds=acc_rounds if test_data is not None else None),
             accuracy_per_round=(acc_rounds if test_data is not None
                                 else None))

@@ -1,0 +1,288 @@
+"""Time-varying scenario engine (repro.core.scenario).
+
+Pins the ISSUE-5 contract: deterministic traces, selection that responds
+to mid-campaign channel fades, scanned==serial parity with traces on, the
+Dirichlet partition's two limits, and the one-host-transfer invariant of a
+scenario campaign.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.splitme_dnn import DNN10
+from repro.core import scenario as scen
+from repro.core.baselines import FedAvgTrainer, ORANFedTrainer
+from repro.core.cost import (SystemParams, round_cost, round_energy,
+                             schedule_metrics, total_time)
+from repro.data import oran
+from repro.launch import campaign
+
+M = 12
+ROUNDS = 6
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    X, y = oran.generate(n_per_class=300, seed=0)
+    (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
+    cd = oran.partition_non_iid(Xtr, ytr, M, samples_per_client=32, seed=0)
+    return (Xtr, ytr), cd, (Xte, yte)
+
+
+def _manual_trace(gain=None, avail=None, drop=None, qc=None, rounds=ROUNDS,
+                  m=M):
+    ones = np.ones((rounds, m))
+    return scen.ScenarioTrace(
+        name="manual", seed=0,
+        gain=ones if gain is None else gain,
+        qc_scale=ones if qc is None else qc,
+        qs_scale=ones.copy(), avail=ones if avail is None else avail,
+        drop=ones if drop is None else drop, deadline_scale=ones.copy())
+
+
+# ---------------------------------------------------------------------------
+# Trace generation
+# ---------------------------------------------------------------------------
+
+def test_traces_deterministic_under_fixed_seed():
+    for name in scen.scenario_names():
+        t1 = scen.make_trace(name, 10, M, seed=7)
+        t2 = scen.make_trace(name, 10, M, seed=7)
+        for ch in ("gain", "qc_scale", "qs_scale", "avail", "drop",
+                   "deadline_scale"):
+            np.testing.assert_array_equal(getattr(t1, ch), getattr(t2, ch))
+    a = scen.make_trace("fading", 10, M, seed=0)
+    b = scen.make_trace("fading", 10, M, seed=1)
+    assert not np.array_equal(a.gain, b.gain)
+
+
+def test_trace_level_suffix_and_registry():
+    t = scen.make_trace("noniid:0.07", 4, M)
+    assert t.data_alpha == pytest.approx(0.07)
+    assert scen.make_trace("noniid", 4, M).data_alpha == pytest.approx(0.3)
+    deep = scen.make_trace("fading:1.5", 30, M, seed=0)
+    mild = scen.make_trace("fading:0.1", 30, M, seed=0)
+    assert deep.gain.std() > mild.gain.std()
+    with pytest.raises(KeyError):
+        scen.make_trace("nope", 4, M)
+    with pytest.raises(ValueError):
+        scen.get_trace(scen.make_trace("static", 3, M), 5, M)  # too short
+    with pytest.raises(ValueError):
+        scen.get_trace(scen.make_trace("static", 5, M + 1), 5, M)
+
+
+def test_static_scenario_matches_no_scenario():
+    """'static' is the all-ones trace: schedules are byte-identical to a
+    plan that never heard of scenarios."""
+    sp0, s0 = campaign.plan_schedule("oranfed", SystemParams(M=M, seed=0),
+                                     DNN10, ROUNDS, E=5)
+    sp1, s1 = campaign.plan_schedule("oranfed", SystemParams(M=M, seed=0),
+                                     DNN10, ROUNDS, E=5, scenario="static")
+    np.testing.assert_array_equal(s0.a, s1.a)
+    np.testing.assert_array_equal(s0.b, s1.b)
+    np.testing.assert_array_equal(s0.E, s1.E)
+    assert s1.trace is not None and s1.trace.is_static()
+    # the planner restores the caller-visible base arrays after the loop
+    np.testing.assert_array_equal(sp1.G_m, np.ones(M))
+    np.testing.assert_array_equal(sp1.avail, np.ones(M))
+
+
+# ---------------------------------------------------------------------------
+# Selection responds to the trace
+# ---------------------------------------------------------------------------
+
+def test_selection_shrinks_on_mid_campaign_fade():
+    """A deep fade from round 3 on slashes every client's achievable rate;
+    the deadline-aware cohort must shrink once realized uplink times feed
+    the estimate (O-RANFed) and IMMEDIATELY for FedORA's re-solved RIC
+    allocation."""
+    rounds = 10
+    gain = np.ones((rounds, M))
+    gain[3:] = 0.05
+    trace = _manual_trace(gain=gain, rounds=rounds)
+
+    _, sched = campaign.plan_schedule("oranfed", SystemParams(M=M, seed=0),
+                                      DNN10, rounds, E=5, scenario=trace)
+    nsel = sched.a.sum(axis=1)
+    assert nsel[2] >= 8                    # pre-fade: grown near full cohort
+    assert nsel[5:].max() < nsel[2]        # post-fade EMA: cohort shrank
+
+    _, sched_f = campaign.plan_schedule("fedora", SystemParams(M=M, seed=0),
+                                        DNN10, rounds, E=5, scenario=trace)
+    nsel_f = sched_f.a.sum(axis=1)
+    assert nsel_f[3] < nsel_f[2]           # RIC re-solves: immediate drop
+
+
+def test_availability_and_dropout_masks():
+    """Blacked-out clients are never selected; mid-round dropouts zero the
+    realized mask, and an all-dropped round keeps exactly one survivor."""
+    avail = np.ones((ROUNDS, M))
+    avail[:, :4] = 0.0                     # clients 0-3 dark all campaign
+    drop = np.ones((ROUNDS, M))
+    drop[2] = 0.0                          # round 2: everyone drops
+    trace = _manual_trace(avail=avail, drop=drop)
+    _, sched = campaign.plan_schedule("fedavg", SystemParams(M=M, seed=0),
+                                      DNN10, ROUNDS, K=6, E=5,
+                                      scenario=trace)
+    assert sched.a[:, :4].sum() == 0
+    assert sched.a[2].sum() == 1           # realized_mask never-stall guard
+    assert (sched.a.sum(axis=1)[[0, 1, 3, 4, 5]] == 6).all()
+
+    # ecofl / fedora also respect availability
+    for fw, kw in (("ecofl", dict(K=6, E=5)), ("fedora", dict(E=5))):
+        _, s = campaign.plan_schedule(fw, SystemParams(M=M, seed=0), DNN10,
+                                      ROUNDS, scenario=trace, **kw)
+        assert s.a[:, :4].sum() == 0, fw
+
+
+def test_straggler_compute_fade_raises_latency():
+    """3×-compute stragglers + blackouts: the realized per-round latency and
+    energy exceed the static plan's on average (same framework, E)."""
+    _, s_static = campaign.plan_schedule("fedavg", SystemParams(M=M, seed=0),
+                                         DNN10, 8, K=6, E=5)
+    _, s_slow = campaign.plan_schedule("fedavg", SystemParams(M=M, seed=0),
+                                       DNN10, 8, K=6, E=5,
+                                       scenario="straggler")
+    sp = SystemParams(M=M, seed=0)
+    sp.omega, sp.S_m = 1.0, np.zeros(M)    # full-model derivation
+    sim0, _, en0 = schedule_metrics(s_static.a, s_static.b, s_static.E, sp)
+    sim1, _, en1 = schedule_metrics(s_slow.a, s_slow.b, s_slow.E, sp,
+                                    trace=s_slow.trace)
+    assert sim1.mean() > sim0.mean()
+    assert (en1 / np.maximum(s_slow.a.sum(1), 1)).mean() > \
+        (en0 / np.maximum(s_static.a.sum(1), 1)).mean()
+
+
+def test_schedule_metrics_match_per_round_scalars():
+    """The vectorized trace × schedule pass equals the scalar eq. 18/20 and
+    energy evaluated with the round-t SystemParams rewrite."""
+    trace = scen.make_trace("fading", ROUNDS, M, seed=3)
+    sp, sched = campaign.plan_schedule("oranfed", SystemParams(M=M, seed=0),
+                                       DNN10, ROUNDS, E=5, scenario=trace)
+    sim, cost, energy = schedule_metrics(sched.a, sched.b, sched.E, sp,
+                                         trace=trace)
+    base = scen.capture_base(sp)
+    for r in range(ROUNDS):
+        scen.apply_round(sp, base, trace, r)
+        np.testing.assert_allclose(
+            sim[r], total_time(sched.a[r], sched.b[r], int(sched.E[r]), sp))
+        np.testing.assert_allclose(
+            cost[r], round_cost(sched.a[r], sched.b[r], int(sched.E[r]), sp))
+        np.testing.assert_allclose(
+            energy[r],
+            round_energy(sched.a[r], sched.b[r], int(sched.E[r]), sp))
+    scen.restore_base(sp, base)
+
+
+# ---------------------------------------------------------------------------
+# Campaign integration: parity + transfer guard
+# ---------------------------------------------------------------------------
+
+def test_scanned_campaign_matches_serial_with_trace(small_data):
+    """With a straggler trace on, a scanned campaign reproduces the serial
+    trainer round for round — losses, realized cohort and every system
+    metric (incl. the new energy) — for the same trace object."""
+    _, cd, test = small_data
+    trace = scen.make_trace("straggler", ROUNDS, M, seed=1)
+    res = campaign.run_campaign("oranfed", DNN10, SystemParams(M=M, seed=0),
+                                cd, rounds=ROUNDS, seeds=(0, 1), E=5,
+                                scenario=trace)
+    tr = ORANFedTrainer(DNN10, SystemParams(M=M, seed=0), cd, test, E=5,
+                        seed=0, scenario=trace, interactive=True)
+    for r in range(ROUNDS):
+        m = tr.run_round()
+        assert res.metrics[r].n_selected == m.n_selected
+        np.testing.assert_allclose(res.metrics[r].comm_bits, m.comm_bits)
+        np.testing.assert_allclose(res.metrics[r].sim_time, m.sim_time)
+        np.testing.assert_allclose(res.metrics[r].energy, m.energy)
+        np.testing.assert_allclose(res.losses[0, r, 0], m.client_loss,
+                                   atol=1e-5, rtol=0)
+
+
+def test_fedavg_serial_matches_campaign_with_trace(small_data):
+    """The randomized FixedK policy consumes the identical RNG stream under
+    a trace (availability-filtered draw), so serial seed==policy_seed still
+    equals the campaign."""
+    _, cd, test = small_data
+    trace = scen.make_trace("straggler", ROUNDS, M, seed=2)
+    res = campaign.run_campaign("fedavg", DNN10, SystemParams(M=M, seed=0),
+                                cd, rounds=ROUNDS, seeds=(0,), K=5, E=5,
+                                scenario=trace)
+    tr = FedAvgTrainer(DNN10, SystemParams(M=M, seed=0), cd, test, K=5, E=5,
+                       seed=0, scenario=trace, interactive=True)
+    serial = [tr.run_round().client_loss for _ in range(ROUNDS)]
+    np.testing.assert_allclose(res.losses[0, :, 0], serial, atol=1e-5,
+                               rtol=0)
+
+
+def test_scenario_campaign_single_host_transfer(small_data, monkeypatch):
+    """The acceptance invariant: a time-varying scenario campaign still
+    compiles to scanned rounds with traces as operands — ONE device→host
+    fetch, zero stray pulls (transfer guard armed)."""
+    _, cd, test = small_data
+    calls = []
+    real = campaign._host_fetch
+    monkeypatch.setattr(campaign, "_host_fetch",
+                        lambda tree: (calls.append(1), real(tree))[1])
+    res = campaign.run_campaign(
+        "splitme", DNN10, SystemParams(M=M, seed=0), cd, rounds=ROUNDS,
+        seeds=(0, 1), test_data=test, scenario="fading",
+        strict_transfers=True)
+    assert len(calls) == 1
+    assert np.isfinite(res.losses).all()
+    assert res.schedule.trace is not None and res.schedule.trace.name == \
+        "fading"
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet partition limits
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_alpha_zero_recovers_seed_partition(small_data):
+    (Xtr, ytr), _, _ = small_data
+    ref = oran.partition_non_iid(Xtr, ytr, 9, 30, seed=4)
+    for alpha in (0.0, 1e-8):
+        got = oran.partition_dirichlet(Xtr, ytr, 9, 30, alpha=alpha, seed=4)
+        np.testing.assert_array_equal(got["x"], ref["x"])
+        np.testing.assert_array_equal(got["y"], ref["y"])
+
+
+def test_dirichlet_alpha_inf_near_iid(small_data):
+    (Xtr, ytr), _, _ = small_data
+    part = oran.partition_dirichlet(Xtr, ytr, 9, 300, alpha=1e6, seed=0)
+    glob = np.bincount(ytr, minlength=oran.N_CLASSES) / len(ytr)
+    for m in range(9):
+        h = np.bincount(part["y"][m], minlength=oran.N_CLASSES) / 300
+        assert np.abs(h - glob).max() < 0.12, (m, h)
+
+
+def test_dirichlet_small_alpha_concentrates_on_anchor_class(small_data):
+    """Small-but-nonzero α: each client is dominated by its anchor class
+    m % C (continuity with the α→0 seed-partition limit)."""
+    (Xtr, ytr), _, _ = small_data
+    part = oran.partition_dirichlet(Xtr, ytr, 9, 200, alpha=1e-4, seed=0)
+    for m in range(9):
+        frac = np.mean(part["y"][m] == m % oran.N_CLASSES)
+        assert frac > 0.95, (m, frac)
+
+
+def test_dirichlet_deterministic_and_shaped(small_data):
+    (Xtr, ytr), _, _ = small_data
+    p1 = oran.partition_dirichlet(Xtr, ytr, 6, 40, alpha=0.3, seed=11)
+    p2 = oran.partition_dirichlet(Xtr, ytr, 6, 40, alpha=0.3, seed=11)
+    np.testing.assert_array_equal(p1["x"], p2["x"])
+    np.testing.assert_array_equal(p1["y"], p2["y"])
+    assert p1["x"].shape == (6, 40, oran.N_FEATURES)
+    mid = oran.partition_dirichlet(Xtr, ytr, 6, 40, alpha=0.3, seed=12)
+    assert not np.array_equal(p1["y"], mid["y"])
+
+
+def test_partition_for_routes_on_trace(small_data):
+    (Xtr, ytr), _, _ = small_data
+    t_iid = scen.make_trace("noniid:1000000", 2, 6)
+    part = scen.partition_for(t_iid, Xtr, ytr, 6, 200, seed=0)
+    assert all(len(np.unique(part["y"][m])) == oran.N_CLASSES
+               for m in range(6))
+    part0 = scen.partition_for(scen.make_trace("fading", 2, 6), Xtr, ytr, 6,
+                               30, seed=0)
+    ref = oran.partition_non_iid(Xtr, ytr, 6, 30, seed=0)
+    np.testing.assert_array_equal(part0["y"], ref["y"])
