@@ -101,6 +101,8 @@ def run(fast: bool = False):
             "accuracy_curve": [(m.round, m.accuracy) for m in h
                                if m.accuracy == m.accuracy],
             "E_per_round": [m.E for m in h],
+            "skipped_rounds": float(sum(m.skipped for m in h)),
+            "quorum_rounds": float(sum(m.quorum_held for m in h)),
         }
         rows.append((f"fig3a_selected_{name}", wall_us,
                      f"mean_sel={np.mean([m.n_selected for m in h]):.1f}"))
@@ -174,6 +176,11 @@ def run(fast: bool = False):
             "scanned_speedup_vs_vmapped_python_loop":
                 mode_stats["python_loop"]["s"] / mode_stats["scanned"]["s"],
             "final_loss_per_seed": res.losses[:, -1, 0].tolist(),
+            # guard accounting (0 here — no faults scenario): surfaced so
+            # the regression gate can spot a guarded-vs-unguarded mismatch
+            "skipped_rounds": res.skipped_rounds,
+            "quorum_rounds": res.quorum_rounds,
+            "crashed_rounds": res.crashed_rounds,
         }
         rows.append((f"campaign_serial{n_seeds}_{name}",
                      serial_s / run_rounds * 1e6,
@@ -245,6 +252,7 @@ def run(fast: bool = False):
             "s": dt,
             "rounds_per_sec": n_reps * pol_rounds / dt,
             "steps_per_sec": steps / dt,
+            "skipped_rounds": float(sum(m.skipped for m in timed)),
             "resolved": {"kl_mutual": bool(pol.kl_mutual),
                          "ridge_gram": bool(pol.ridge_gram),
                          "compute_dtype": pol.precision.compute},
@@ -274,6 +282,11 @@ def run(fast: bool = False):
             "sim_time_s": summary[name]["sim_time_s"],
             "resource_cost": summary[name]["resource_cost"],
             "energy_j": summary[name]["energy_j"],
+            # guarded-run accounting: a baseline whose skipped_rounds
+            # differs from the fresh run trained a different effective
+            # round count, so the gate treats the row as informational
+            "skipped_rounds": summary[name]["skipped_rounds"],
+            "quorum_rounds": summary[name]["quorum_rounds"],
         } for name in makers
     }
     n_per_client = int(cd["x"].shape[1])    # same partition as the runs
@@ -307,7 +320,7 @@ def run(fast: bool = False):
     from repro.core import scenario as scen_mod
     from repro.core.cost import schedule_metrics
 
-    scen_names = ("static", "fading", "straggler", "noniid")
+    scen_names = ("static", "fading", "straggler", "noniid", "faults:0.3")
     scenario_plans = {}
     for name in makers:
         scenario_plans[name] = {}
@@ -347,6 +360,11 @@ def run(fast: bool = False):
                 [m.n_selected for m in res.metrics])),
             "rounds_per_sec": 2 * scen_rounds / dt,
             "data_alpha": trace.data_alpha,
+            # in-scan guard accounting (nonzero only for the faults:p
+            # family, whose trace auto-arms RoundGuards)
+            "skipped_rounds": res.skipped_rounds,
+            "quorum_rounds": res.quorum_rounds,
+            "crashed_rounds": res.crashed_rounds,
         }
         rows.append((f"scenario_{sc}_splitme", dt / scen_rounds * 1e6,
                      f"acc={scenario_trained[sc]['final_accuracy_mean']:.3f};"

@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/oran_splitfl_campaign.py [--rounds 30]
         [--baselines] [--ckpt-dir /tmp/splitme] [--seeds 4] [--quant bf16]
-        [--scenario fading]
+        [--scenario fading] [--checkpoint-every 10] [--resume]
 
 Trains SplitMe to convergence on the COMMAG-style slice data (30 rounds, as
 in §V-B), checkpoints (w_C, w_S⁻¹) every 10 rounds, performs the final
@@ -32,7 +32,16 @@ carry a level suffix: ``fading:0.8`` (fade σ), ``straggler:0.4``
 (blackout prob), ``noniid:0.1`` (α).  Selection/allocation re-solve per
 round against the round-t trace; with ``--seeds N`` the whole trace-driven
 campaign still runs as compiled scans with one host transfer
-(``--scenario-seed`` varies the trace draw).
+(``--scenario-seed`` varies the trace draw).  ``faults:p`` injects
+failures — NaN-poisoned client updates, server-crash rounds, bit-flipped
+wire payloads — and auto-arms the in-scan guards (non-finite rollback,
+quorum hold); the run reports skipped/quorum/crashed round counts.
+
+Campaign runs are fault-tolerant (``repro.launch.resilience``):
+``--checkpoint-every K`` persists the full campaign carry to
+``--checkpoint-dir`` every K rounds with atomic manifests, and
+``--resume`` restores the newest committed checkpoint and continues
+bit-exactly — rerun the identical command line after a crash.
 
 With ``--seeds N`` (N > 1) the run goes through the scanned multi-seed
 campaign runner instead: N independent seeds train through one compiled
@@ -95,7 +104,25 @@ def main():
                          "noniid:0.1); default: the frozen network snapshot")
     ap.add_argument("--scenario-seed", type=int, default=0,
                     help="seed of the scenario trace draw")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    help="campaign mode: persist the full campaign carry "
+                         "(params/RNG/EF state/metric buffers) every K "
+                         "rounds to --checkpoint-dir (atomic manifests)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="campaign checkpoint directory (default: "
+                         "<--ckpt-dir>/campaign)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the campaign from the newest committed "
+                         "checkpoint in --checkpoint-dir (bit-exact; "
+                         "fresh start when the directory is empty)")
     args = ap.parse_args()
+    if (args.resume or args.checkpoint_every) and args.seeds <= 1:
+        ap.error("--checkpoint-every/--resume need the scanned campaign "
+                 "runner (--seeds N with N > 1)")
+    if args.resume and not args.checkpoint_every:
+        ap.error("--resume needs --checkpoint-every (the resumed run "
+                 "replans the same segment boundaries)")
+    ckpt_dir = args.checkpoint_dir or f"{args.ckpt_dir}/campaign"
 
     X, y = oran.generate(n_per_class=2000, seed=0)
     (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
@@ -129,12 +156,19 @@ def main():
         ] if args.baselines else []):
             rounds = args.rounds if name == "splitme" else args.baseline_rounds
             t0 = time.time()
+            # per-framework checkpoint subdir: each plan has its own
+            # schedule fingerprint, so checkpoints must not interleave
             res = campaign.run_campaign(name, DNN10, SystemParams(seed=0),
                                         clients, rounds=rounds, seeds=seeds,
                                         test_data=(Xte, yte),
                                         eval_every=args.eval_every,
                                         policy=args.policy,
                                         quant=args.quant, scenario=trace,
+                                        checkpoint_every=args.checkpoint_every,
+                                        checkpoint_dir=(f"{ckpt_dir}/{name}"
+                                                        if args.checkpoint_every
+                                                        else None),
+                                        resume=args.resume,
                                         **kw)
             acc = res.accuracy
             print(f"[{name}] {len(seeds)} seeds x {rounds} rounds: "
@@ -143,6 +177,11 @@ def main():
                   f"comm={sum(m.comm_bits for m in res.metrics) / 8e6:.1f}MB "
                   f"sim_time={sum(m.sim_time for m in res.metrics):.2f}s "
                   f"wall={time.time() - t0:.0f}s")
+            if res.skipped_per_round is not None or res.crashed_rounds:
+                print(f"[{name}] guards: skipped_rounds="
+                      f"{res.skipped_rounds} quorum_rounds="
+                      f"{res.quorum_rounds} crashed_rounds="
+                      f"{res.crashed_rounds}")
             if args.eval_every:
                 curve = [(m.round, round(m.accuracy, 3))
                          for m in res.metrics if m.accuracy == m.accuracy]

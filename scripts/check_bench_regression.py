@@ -23,6 +23,12 @@ the final stage.  Two gates share the tolerance band (default 30%):
   still trips CI.  Baselines predating the per-framework field report
   informationally.
 
+Rows whose ``skipped_rounds``/``quorum_rounds`` counts differ between
+baseline and fresh run are informational: a guarded run (in-scan fault
+rollbacks, ``repro.launch.resilience``) executes a different effective
+workload than an unguarded one, and the gate must never silently compare
+the two.
+
 Absolute throughput is machine-specific, so the HARD gate only applies
 when the baseline's ``env`` fingerprint (platform / machine / cpu_count /
 backend, written by the bench) matches the fresh run's — a baseline
@@ -68,6 +74,16 @@ def _gate_row(br, fr, gated, tolerance):
     return delta, ("  << REGRESSION" if regressed else ""), regressed
 
 
+def _guards_differ(b, f) -> bool:
+    """A guarded run (nonzero skipped/quorum round counts, written by the
+    bench since the resilience runtime landed) executes a different
+    effective workload than an unguarded one — comparing their throughput
+    would be apples to oranges, so mismatched counts demote the row to
+    informational.  Absent fields (pre-resilience baselines) mean 0."""
+    return any(float(b.get(k, 0) or 0) != float(f.get(k, 0) or 0)
+               for k in ("skipped_rounds", "quorum_rounds"))
+
+
 def check_modes(base, fresh, gate_mode, tolerance, gate_armed) -> bool:
     """Round-policy mode comparison; returns True on a gated regression."""
     failed = False
@@ -81,9 +97,14 @@ def check_modes(base, fresh, gate_mode, tolerance, gate_armed) -> bool:
             continue
         br, fr = b.get("rounds_per_sec", 0.0), f.get("rounds_per_sec", 0.0)
         bs, fs = b.get("steps_per_sec", 0.0), f.get("steps_per_sec", 0.0)
+        guards_differ = _guards_differ(b, f)
         delta, verdict, regressed = _gate_row(
-            br, fr, gate_armed and mode == gate_mode, tolerance)
+            br, fr, gate_armed and mode == gate_mode and not guards_differ,
+            tolerance)
         failed = failed or regressed
+        if guards_differ:
+            verdict = "     (guard-skipped round counts differ; " \
+                      "informational)"
         print(f"{mode:<14} {br:>10.3f} {fr:>10.3f} {delta:>+7.1%} "
               f"{bs:>10.0f} {fs:>10.0f}{verdict}")
     return failed
@@ -112,12 +133,17 @@ def check_frameworks(base_data, fresh_data, tolerance, gate_armed) -> bool:
                   f"missing on one side; informational)")
             continue
         same_rounds = b.get("rounds") == f.get("rounds")
+        guards_differ = _guards_differ(b, f)
         delta, verdict, regressed = _gate_row(
-            br, fr, gate_armed and same_rounds, tolerance)
+            br, fr, gate_armed and same_rounds and not guards_differ,
+            tolerance)
         failed = failed or regressed
         if not same_rounds:
             verdict = (f"     (round counts differ: {b.get('rounds')} vs "
                        f"{f.get('rounds')}; informational)")
+        elif guards_differ:
+            verdict = "     (guard-skipped round counts differ; " \
+                      "informational)"
         print(f"{name:<14} {br:>10.3f} {fr:>10.3f} {delta:>+7.1%}{verdict}")
     return failed
 

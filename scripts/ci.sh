@@ -1,11 +1,14 @@
 #!/usr/bin/env sh
 # CI pipeline (also runnable locally):
 #   1. ruff lint + ruff format --check      — style/format drift fails fast
-#   2. non-slow, non-kernel test suite
+#   2. non-slow, non-kernel test suite      — includes the faults:p smoke
 #   3. kernel parity under the Pallas interpreter
-#   4. fast FL-framework bench              — refreshes BENCH_fl.json +
+#   4. crash-resume check                   — SIGKILL a checkpointed
+#                                             campaign mid-run, resume,
+#                                             assert byte-identical metrics
+#   5. fast FL-framework bench              — refreshes BENCH_fl.json +
 #                                             benchmarks/results/
-#   5. bench regression gate                — fresh --fast rounds/sec vs the
+#   6. bench regression gate                — fresh --fast rounds/sec vs the
 #                                             baseline (mode + per-framework)
 #
 #     sh scripts/ci.sh
@@ -40,6 +43,9 @@ python -m pytest -q -m "not slow and not kernels"
 
 echo "== kernel parity (Pallas interpret mode) =="
 REPRO_PALLAS_INTERPRET=1 python -m pytest -q -m kernels
+
+echo "== crash-resume check (SIGKILL + resume, byte-identical) =="
+python scripts/crash_resume_check.py
 
 echo "== benchmarks (fast, fl_frameworks) =="
 # snapshot the baselines BEFORE the run rewrites BENCH_fl.json

@@ -3,10 +3,17 @@
 Pytrees are flattened to path-keyed arrays; restore rebuilds the exact tree
 structure and (optionally) re-applies NamedShardings via jax.device_put.
 Works for params, optimizer state and SplitMe's (w_C, w_S⁻¹) pairs alike.
+
+Saves are ATOMIC: both files are written to ``*.tmp`` siblings and renamed
+into place, npz first and the json manifest LAST — the manifest is the
+commit point, so a crash mid-save can never leave a manifest that points at
+a truncated payload (``repro.launch.resilience`` leans on this to treat
+"manifest exists" as "checkpoint is complete").
 """
 from __future__ import annotations
 
 import json
+import os
 from pathlib import Path
 from typing import Optional
 
@@ -31,7 +38,13 @@ def save(path: str | Path, tree, metadata: Optional[dict] = None) -> None:
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
-    np.savez(path.with_suffix(".npz"), **flat)
+    # npz payload first, manifest last: the manifest commits the checkpoint.
+    # Tmp siblings keep np.savez's append-.npz behavior happy and stay on
+    # the same filesystem so os.replace is an atomic rename.
+    npz = path.with_suffix(".npz")
+    tmp_npz = npz.with_name(npz.stem + ".tmp.npz")
+    np.savez(tmp_npz, **flat)
+    os.replace(tmp_npz, npz)
     treedef = jax.tree_util.tree_structure(tree)
     manifest = {
         "treedef": str(treedef),
@@ -40,16 +53,37 @@ def save(path: str | Path, tree, metadata: Optional[dict] = None) -> None:
         "dtypes": {k: str(v.dtype) for k, v in flat.items()},
         "metadata": metadata or {},
     }
-    path.with_suffix(".json").write_text(json.dumps(manifest, indent=1))
+    man = path.with_suffix(".json")
+    tmp_man = man.with_name(man.stem + ".tmp.json")
+    tmp_man.write_text(json.dumps(manifest, indent=1))
+    os.replace(tmp_man, man)
+
+
+def _check_keys(stored, wanted, path) -> None:
+    """A clear error naming the exact key mismatch instead of a raw
+    ``KeyError`` from the npz lookup."""
+    missing = sorted(set(wanted) - set(stored))
+    extra = sorted(set(stored) - set(wanted))
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint {path} does not match the restore structure: "
+            f"missing keys {missing or '[]'}, extra keys {extra or '[]'} "
+            f"(checkpoint has {len(stored)} arrays, restore tree wants "
+            f"{len(wanted)})")
 
 
 def restore(path: str | Path, like, shardings=None):
     """Restore into the structure of `like` (a pytree of arrays or
     ShapeDtypeStructs).  `shardings`: optional matching pytree of
-    NamedShardings to place the restored arrays."""
+    NamedShardings to place the restored arrays.  A structure mismatch
+    raises a ``ValueError`` listing the missing/extra keys."""
     path = Path(path)
     data = np.load(path.with_suffix(".npz"))
     flat_like = jax.tree_util.tree_flatten_with_path(like)
+    _check_keys(list(data.files),
+                ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                          for k in p) for p, _ in flat_like[0]],
+                path)
     leaves = []
     for p, leaf in flat_like[0]:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
@@ -68,6 +102,15 @@ def restore(path: str | Path, like, shardings=None):
     if shardings is not None:
         tree = jax.tree.map(jax.device_put, tree, shardings)
     return tree
+
+
+def load_arrays(path: str | Path) -> dict:
+    """Load a checkpoint's payload as a flat ``{key: np.ndarray}`` dict
+    (no ``like`` tree needed — for flat-dict checkpoints such as the
+    campaign runner's metric buffers, whose shapes the caller does not
+    know up front)."""
+    data = np.load(Path(path).with_suffix(".npz"))
+    return {k: data[k] for k in data.files}
 
 
 def manifest(path: str | Path) -> dict:

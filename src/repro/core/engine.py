@@ -100,6 +100,30 @@ ParamsTuple = Tuple[Params, ...]
 _QSALT = 0x5157
 
 
+@dataclass(frozen=True)
+class RoundGuards:
+    """In-scan fault guards for a round (``repro.launch.resilience``).
+
+    ``nonfinite``   — detect NaN/Inf in the aggregated update and ROLL THE
+                      ROUND BACK (hold the previous params and EF qstate;
+                      the round counts toward ``skipped_rounds``),
+    ``min_clients`` — quorum: when the realized cohort |A_t| falls below
+                      this, degrade to a hold-round instead of averaging
+                      over a near-empty set (counts toward
+                      ``quorum_rounds``),
+    ``clip_norm``   — optional robust aggregation: clip each client's
+                      update to this global L2 norm at the
+                      quantize-before-psum point (bounds finite wire
+                      corruption; NaN updates pass through to the
+                      non-finite rollback).
+
+    All three run INSIDE the compiled round, so guarded campaigns stay one
+    compiled program with one host transfer."""
+    nonfinite: bool = True
+    min_clients: int = 1
+    clip_norm: Optional[float] = None
+
+
 @dataclass
 class RoundMetrics:
     round: int
@@ -115,6 +139,14 @@ class RoundMetrics:
     accuracy: float = float("nan")
     client_loss: float = float("nan")
     server_loss: float = float("nan")
+    # guarded-campaign accounting (0 everywhere when guards are off):
+    # fraction of seeds whose round was rolled back on a non-finite
+    # aggregate / held for quorum, and whether the round was a server-crash
+    # injection — the bench summaries surface these so a guarded run is
+    # never silently compared against an unguarded baseline.
+    skipped: float = 0.0
+    quorum_held: float = 0.0
+    crashed: float = 0.0
 
 
 def fetch_history(history) -> list:
@@ -268,7 +300,8 @@ def _phase_runner(phase: PhaseSpec, n: int, batch_size: int, e_max: int,
 
 def _round_core(spec: FrameworkSpec, runners, params: ParamsTuple, ctx_c,
                 a_mask, e_steps, keys, qstate=(), qkey=None,
-                axis_names: Optional[Tuple[str, ...]] = None):
+                axis_names: Optional[Tuple[str, ...]] = None,
+                faults=None, guards: Optional[RoundGuards] = None):
     """One masked round over a client cohort (the full M axis, a gathered
     cohort, or one device's shard — ``axis_names`` turns the aggregation
     sums into cross-shard psums).
@@ -277,7 +310,19 @@ def _round_core(spec: FrameworkSpec, runners, params: ParamsTuple, ctx_c,
     the point where it would cross the mesh: int8 stochastically rounds
     the partial masked-FedAvg sums (error feedback carried in ``qstate``)
     BEFORE the psum, bf16 narrows the bundled all-reduce itself — either
-    way the round still performs exactly one collective."""
+    way the round still performs exactly one collective.
+
+    ``faults`` (optional dict, per-cohort slices of the scenario's fault
+    channels) injects failures into the UPLOADED per-client updates before
+    aggregation: ``"poison"`` (m,) NaN-poisons a selected client's update,
+    ``"wire_gain"`` (m,) multiplies it (exponent-bit-flip corruption).
+
+    ``guards`` (a ``RoundGuards``) arms the in-scan protections: per-client
+    norm clipping of the update payload, then — after the aggregate exists
+    — non-finite rollback and the quorum hold.  With guards the return
+    grows a 4th element, ``flags = {"skipped", "quorum"}`` (f32 scalars);
+    without guards the return is the classic 3-tuple and the compiled
+    program is byte-identical to the pre-resilience engine."""
     m = ctx_c["x"].shape[0]                 # (local) client-cohort axis
     updated: Dict[int, Params] = {}
     phase_losses = []
@@ -288,6 +333,27 @@ def _round_core(spec: FrameworkSpec, runners, params: ParamsTuple, ctx_c,
             w_rep, ctx_c[ph.data_key], tgt, e_steps, keys[pi])
         updated[ph.param_idx] = w_new
         phase_losses.append(loss_m)
+    # Fault injection + robust aggregation act on the per-client UPDATE
+    # (delta from the round-start globals) — the payload a client uploads —
+    # right before it would cross the wire.
+    clip = guards.clip_norm if guards is not None else None
+    if faults is not None or clip is not None:
+        poison = faults.get("poison") if faults is not None else None
+        wire = faults.get("wire_gain") if faults is not None else None
+        for i, u in updated.items():
+            delta = jax.tree.map(lambda wn, wo: wn - wo[None], u, params[i])
+            if wire is not None:
+                delta = quantcomm.apply_client_gain(delta, wire)
+            if poison is not None:
+                # only SELECTED clients poison the aggregate: a NaN on a
+                # mask-0 client would leak through 0 * NaN in the masked sum
+                bad = jnp.logical_and(poison > 0, a_mask > 0)
+                delta = quantcomm.apply_client_gain(
+                    delta, jnp.where(bad, jnp.nan, 1.0))
+            if clip is not None:
+                delta = quantcomm.clip_client_norm(delta, clip)
+            updated[i] = jax.tree.map(lambda d, wo: wo[None] + d,
+                                      delta, params[i])
     # Masked-FedAvg numerators, the |A_t| count and the loss sums all cross
     # the mesh in ONE fused psum — the paper's "one communication per round"
     # is literally one all-reduce in the lowered HLO (fl_dryrun pins this).
@@ -296,6 +362,7 @@ def _round_core(spec: FrameworkSpec, runners, params: ParamsTuple, ctx_c,
     msum = jnp.sum(a_mask)
     loss_sums = tuple(jnp.sum(l * a_mask) for l in phase_losses)
     quant = spec.quant
+    old_qstate = qstate
     if quant.stochastic:
         weighted, qstate = quantcomm.fake_quant_int8(
             weighted, qstate, qkey, quant)
@@ -314,7 +381,30 @@ def _round_core(spec: FrameworkSpec, runners, params: ParamsTuple, ctx_c,
         else params[i]
         for i in range(len(params)))
     losses = tuple(s / wsum for s in loss_sums)
-    return new_params, losses, qstate
+    if guards is None:
+        return new_params, losses, qstate
+    # In-scan guards on the AGGREGATED update (post-psum, so every shard
+    # takes the identical decision): non-finite → roll the whole round back
+    # (params and EF state hold), |A_t| < quorum → hold-round.
+    finite = jnp.asarray(True)
+    if guards.nonfinite:
+        for i in updated:
+            for leaf in jax.tree.leaves(new_params[i]):
+                finite = jnp.logical_and(finite,
+                                         jnp.all(jnp.isfinite(leaf)))
+    quorum_ok = (msum >= guards.min_clients if guards.min_clients > 1
+                 else jnp.asarray(True))
+    apply = jnp.logical_and(finite, quorum_ok)
+    new_params = jax.tree.map(lambda n, o: jnp.where(apply, n, o),
+                              new_params, params)
+    qstate = jax.tree.map(lambda n, o: jnp.where(apply, n, o),
+                          qstate, old_qstate)
+    flags = {
+        "skipped": 1.0 - finite.astype(jnp.float32),
+        "quorum": finite.astype(jnp.float32)
+        * (1.0 - quorum_ok.astype(jnp.float32)),
+    }
+    return new_params, losses, qstate, flags
 
 
 def init_quant_state(spec: FrameworkSpec, params: Params,
@@ -364,7 +454,9 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
                    x: jax.Array, y: jax.Array, *, e_max: int,
                    donate: bool = True, jit: bool = True,
                    gather: bool = False,
-                   policy: Optional[KernelPolicy] = None):
+                   policy: Optional[KernelPolicy] = None,
+                   guards: Optional[RoundGuards] = None,
+                   with_faults: bool = False):
     """Compile one federated round for `spec` over the fixed client dataset.
 
     Returns ``round_fn(params_tuple, a_mask, e_steps, key, qstate) ->
@@ -396,6 +488,13 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
     CLIENT DATASET is cast to the compute dtype once per campaign, instead
     of once per batch inside the loss (halves the x-gather traffic of
     every local step).
+
+    ``guards`` (a ``RoundGuards``) arms the in-scan fault guards; the
+    returned function then yields ``(params, losses, qstate, flags)`` —
+    see ``_round_core``.  ``with_faults=True`` appends a trailing
+    ``faults`` argument (dict of per-cohort fault-channel slices) for the
+    fault-injection scenarios.  Both default off, leaving the signature,
+    numerics and compiled program untouched.
     """
     pol = _bound_policy(spec, policy)
     if pol.precision.is_mixed:
@@ -409,7 +508,7 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
 
     if gather:
         def round_fn(params: ParamsTuple, sel_idx, sel_mask, e_steps, key,
-                     qstate=()):
+                     qstate=(), faults=None):
             # full per-client key split, gathered: stream m is the same
             # whether or not the other clients are computed
             keys = jax.random.split(key, n_ph * M).reshape(
@@ -417,14 +516,19 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
             qkey = _quant_key(spec, key)
             ctx_c = {k: v[sel_idx] for k, v in ctx.items()}
             return _round_core(spec, runners, params, ctx_c, sel_mask,
-                               e_steps, keys, qstate, qkey)
+                               e_steps, keys, qstate, qkey,
+                               faults=faults if with_faults else None,
+                               guards=guards)
         donate_args = (0, 5)
     else:
-        def round_fn(params: ParamsTuple, a_mask, e_steps, key, qstate=()):
+        def round_fn(params: ParamsTuple, a_mask, e_steps, key, qstate=(),
+                     faults=None):
             keys = jax.random.split(key, n_ph * M).reshape(n_ph, M, -1)
             qkey = _quant_key(spec, key)
             return _round_core(spec, runners, params, ctx, a_mask, e_steps,
-                               keys, qstate, qkey)
+                               keys, qstate, qkey,
+                               faults=faults if with_faults else None,
+                               guards=guards)
         donate_args = (0, 4)
 
     if not jit:
@@ -445,7 +549,9 @@ def _quant_key(spec: FrameworkSpec, key):
 def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
                            n_clients: int, e_max: int, donate: bool = True,
                            jit: bool = True, unroll_steps: bool = False,
-                           policy: Optional[KernelPolicy] = None):
+                           policy: Optional[KernelPolicy] = None,
+                           guards: Optional[RoundGuards] = None,
+                           with_faults: bool = False):
     """Compile one federated round for `spec` with the CLIENT AXIS SHARDED
     over the mesh ``data``/``pod`` axes via ``shard_map``.
 
@@ -498,7 +604,10 @@ def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
             idx = idx * size + jax.lax.axis_index(a)
         return idx
 
-    def local_round(params, x_s, y_s, a_s, e_steps, keys_s, qstate_s, qkey):
+    guarded = guards is not None or with_faults
+
+    def local_round(params, x_s, y_s, a_s, e_steps, keys_s, qstate_s, qkey,
+                    faults_s=None):
         n = x_s.shape[1]
         runners = [_phase_runner(ph, n, spec.batch_size, e_max, unroll_steps)
                    for ph in spec.phases]
@@ -508,26 +617,43 @@ def build_sharded_round_fn(spec: FrameworkSpec, cfg: DNNConfig, mesh, *,
         qstate = jax.tree.map(lambda l: l[0], qstate_s)
         if spec.quant.stochastic:
             qkey = jax.random.fold_in(qkey, shard_index())
-        new_params, losses, qstate = _round_core(
+        out = _round_core(
             spec, runners, params, ctx_c, a_s, e_steps, keys_s, qstate,
-            qkey, axis_names=axes)
-        return new_params, losses, jax.tree.map(lambda l: l[None], qstate)
+            qkey, axis_names=axes,
+            faults=faults_s if with_faults else None, guards=guards)
+        new_params, losses, qstate = out[:3]
+        qstate = jax.tree.map(lambda l: l[None], qstate)
+        if guards is not None:
+            # flags derive from post-psum values, so every shard returns
+            # the identical (replicated) decision
+            return new_params, losses, qstate, out[3]
+        return new_params, losses, qstate
 
     c_spec = P(axes)
-    sharded = shard_map(
-        local_round, mesh=mesh,
-        in_specs=(P(), c_spec, c_spec, c_spec, P(), P(None, axes),
-                  c_spec, P()),
-        out_specs=(P(), P(), c_spec), check_rep=False)
+    in_specs = (P(), c_spec, c_spec, c_spec, P(), P(None, axes), c_spec, P())
+    out_specs = (P(), P(), c_spec)
+    if guarded:
+        in_specs = in_specs + (c_spec,)       # faults dict (per-client)
+    if guards is not None:
+        out_specs = out_specs + (P(),)        # flags (replicated scalars)
+    sharded = shard_map(local_round, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
 
-    def round_fn(params: ParamsTuple, x, y, a_mask, e_steps, key, qstate=()):
+    ones_faults = {"poison": jnp.zeros((M,), jnp.float32),
+                   "wire_gain": jnp.ones((M,), jnp.float32)}
+
+    def round_fn(params: ParamsTuple, x, y, a_mask, e_steps, key, qstate=(),
+                 faults=None):
         if pol.precision.is_mixed:
             x = x.astype(pol.precision.compute_dtype)
         keys = jax.random.split(key, n_ph * M).reshape(n_ph, M, -1)
         # the fold_in is dead (DCE'd) unless the spec's wire format is
         # stochastic; passing it unconditionally keeps one shard_map arity
         qkey = jax.random.fold_in(key, _QSALT)
-        return sharded(params, x, y, a_mask, e_steps, keys, qstate, qkey)
+        if not guarded:
+            return sharded(params, x, y, a_mask, e_steps, keys, qstate, qkey)
+        return sharded(params, x, y, a_mask, e_steps, keys, qstate, qkey,
+                       faults if faults is not None else ones_faults)
 
     if not jit:
         return round_fn

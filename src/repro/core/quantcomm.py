@@ -114,6 +114,32 @@ def get_quant(quant: QuantLike = None) -> CommQuant:
 # Wire-format simulation
 # ---------------------------------------------------------------------------
 
+def _per_client(vec: jax.Array, like: jax.Array) -> jax.Array:
+    """Reshape a (m,) per-client vector to broadcast over a (m, ...) leaf."""
+    return vec.reshape((-1,) + (1,) * (like.ndim - 1))
+
+
+def apply_client_gain(tree: Any, gain: jax.Array) -> Any:
+    """Multiply each client's payload slice (leading axis = client) by its
+    per-client gain — the wire-corruption channel of the ``faults:p``
+    scenarios (an exponent-bit flip on the upload is a ±2^k gain)."""
+    return jax.tree.map(lambda l: l * _per_client(gain, l), tree)
+
+
+def clip_client_norm(tree: Any, max_norm: float) -> Any:
+    """Per-client global-norm clip of an update payload pytree (leaves are
+    (m, ...); the norm is over everything but the client axis, summed
+    across leaves) — the optional robust-aggregation guard applied where
+    the payload is about to cross the wire.  A non-finite client norm
+    yields a non-finite scale, so NaN-poisoned updates stay NaN and the
+    aggregated-update rollback guard (not the clip) handles them."""
+    leaves = jax.tree.leaves(tree)
+    sq = sum(jnp.sum(jnp.square(l), axis=tuple(range(1, l.ndim)))
+             for l in leaves)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(jnp.sqrt(sq), 1e-12))
+    return jax.tree.map(lambda l: l * _per_client(scale, l), tree)
+
+
 def simulate_cast(tree: Any, dtype) -> Any:
     """Round every leaf through ``dtype`` and widen back (the bf16 wire
     format when there is no real psum to carry it — the single-device

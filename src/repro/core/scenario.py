@@ -25,6 +25,21 @@ dynamism.  A ``ScenarioTrace`` supplies the missing axis:
                  (``repro.data.oran.partition_dirichlet``); None keeps the
                  paper's one-class-per-client split.
 
+FAULT channels (the ``faults:p`` family, consumed by the in-scan guards of
+``repro.launch.resilience`` — the RIC does NOT see them at selection time,
+so schedules are planned blind to them, exactly like mid-round dropouts):
+
+* ``poison``    (R, M) — 1 = this client's uploaded update is NaN/Inf-
+                 poisoned this round (device OOM / driver bug / adversary),
+* ``crash``     (R,)   — 1 = the server/runner crashes this round: the
+                 round's aggregation is lost and the campaign holds the
+                 previous global params,
+* ``wire_gain`` (R, M) — multiplicative corruption of the client's wire
+                 payload (1 almost everywhere; an exponent-bit flip on the
+                 quantized upload lands a ±2^12 factor — finite but huge,
+                 which is what the norm-clipping robust-aggregation guard
+                 is for).
+
 Everything is drawn up front from ONE scenario seed (`make_trace` is
 deterministic), so traces precompute host-side exactly like schedules do:
 the policies re-select each round against the round-t trace
@@ -64,6 +79,11 @@ class ScenarioTrace:
     deadline_scale: np.ndarray  # (R, M) multiplier on t_round
     data_alpha: Optional[float] = None   # Dirichlet α (None = seed split)
     level: Optional[float] = None
+    # fault-injection channels (None on non-fault scenarios; see module
+    # docstring — the planner never reads these, the in-scan guards do)
+    poison: Optional[np.ndarray] = None     # (R, M) 1 = NaN-poisoned update
+    crash: Optional[np.ndarray] = None      # (R,)   1 = server-crash round
+    wire_gain: Optional[np.ndarray] = None  # (R, M) payload corruption gain
 
     @property
     def rounds(self) -> int:
@@ -75,10 +95,20 @@ class ScenarioTrace:
 
     def is_static(self) -> bool:
         """True when every trace channel is the all-ones constant (the
-        schedule planner then skips per-round SystemParams rewrites)."""
+        schedule planner then skips per-round SystemParams rewrites).
+        Fault channels don't affect planning, so they don't count here."""
         return all(np.all(arr == 1.0) for arr in (
             self.gain, self.qc_scale, self.qs_scale, self.avail, self.drop,
             self.deadline_scale))
+
+    def has_faults(self) -> bool:
+        """True when any fault-injection channel is armed (the campaign
+        runner then threads the fault operands into the scan and turns the
+        in-scan guards on by default)."""
+        return ((self.poison is not None and np.any(self.poison != 0))
+                or (self.crash is not None and np.any(self.crash != 0))
+                or (self.wire_gain is not None
+                    and np.any(self.wire_gain != 1.0)))
 
 
 @dataclass
@@ -222,11 +252,46 @@ def _gen_noniid(rounds: int, m: int, seed: int,
     return {"data_alpha": alpha}
 
 
+# exponent-bit-flip magnitude of a corrupted wire payload: a single flipped
+# exponent bit multiplies a float by 2^±k; 2^12 ≈ 4096x is far outside any
+# healthy update norm yet finite, so only the norm-clip guard catches it
+WIRE_FLIP_GAIN = 2.0 ** 12
+
+
+def _gen_faults(rounds: int, m: int, seed: int,
+                level: Optional[float] = None) -> Dict[str, np.ndarray]:
+    """Fault-injection traces (``faults:p``, default p = 0.1): a static RAN
+    whose TRAINING RUNTIME fails.  Per round, drawn i.i.d. from the
+    scenario seed:
+
+    * each client's uploaded update is NaN-poisoned w.p. ``p/10`` (with a
+      ~10-client cohort, a fraction p of rounds lose their aggregate to
+      non-finites and must roll back),
+    * the server/runner crashes w.p. ``p/4`` (the round is lost; the
+      campaign holds the previous params),
+    * each client's wire payload suffers an exponent-bit flip w.p. ``p/20``
+      (a finite ±2^12 corruption — the norm-clip guard's case).
+
+    The RIC channels (gain/avail/drop/...) stay all-ones: selection and
+    allocation plan blind to the faults, which is the point — the paper's
+    deadlines are met or missed by the RUNTIME surviving, not by the
+    planner foreseeing the failure."""
+    p = 0.1 if level is None else float(level)
+    rng = np.random.default_rng(seed)
+    poison = (rng.random((rounds, m)) < p / 10).astype(np.float64)
+    crash = (rng.random(rounds) < p / 4).astype(np.float64)
+    flip = rng.random((rounds, m)) < p / 20
+    sign = np.where(rng.random((rounds, m)) < 0.5, -1.0, 1.0)
+    wire_gain = np.where(flip, sign * WIRE_FLIP_GAIN, 1.0)
+    return {"poison": poison, "crash": crash, "wire_gain": wire_gain}
+
+
 _REGISTRY: Dict[str, Callable[..., Dict[str, np.ndarray]]] = {
     "static": _gen_static,
     "fading": _gen_fading,
     "straggler": _gen_straggler,
     "noniid": _gen_noniid,
+    "faults": _gen_faults,
 }
 
 ScenarioLike = Union[None, str, ScenarioTrace]
@@ -262,7 +327,9 @@ def make_trace(name: str, rounds: int, n_clients: int, *,
         avail=ch.get("avail", ones).copy(),
         drop=ch.get("drop", ones).copy(),
         deadline_scale=ch.get("deadline_scale", ones).copy(),
-        data_alpha=ch.get("data_alpha"))
+        data_alpha=ch.get("data_alpha"),
+        poison=ch.get("poison"), crash=ch.get("crash"),
+        wire_gain=ch.get("wire_gain"))
 
 
 def get_trace(scenario: ScenarioLike, rounds: int, n_clients: int, *,
@@ -286,6 +353,7 @@ def get_trace(scenario: ScenarioLike, rounds: int, n_clients: int, *,
         raise ValueError(f"trace covers {scenario.rounds} rounds, "
                          f"need {rounds}")
     if scenario.rounds > rounds:
+        cut = lambda arr: None if arr is None else arr[:rounds]  # noqa: E731
         return ScenarioTrace(
             name=scenario.name, seed=scenario.seed, level=scenario.level,
             gain=scenario.gain[:rounds],
@@ -293,7 +361,9 @@ def get_trace(scenario: ScenarioLike, rounds: int, n_clients: int, *,
             qs_scale=scenario.qs_scale[:rounds],
             avail=scenario.avail[:rounds], drop=scenario.drop[:rounds],
             deadline_scale=scenario.deadline_scale[:rounds],
-            data_alpha=scenario.data_alpha)
+            data_alpha=scenario.data_alpha,
+            poison=cut(scenario.poison), crash=cut(scenario.crash),
+            wire_gain=cut(scenario.wire_gain))
     return scenario
 
 

@@ -48,11 +48,22 @@ precomputable: ``plan_schedule(scenario=...)`` re-selects each round
 against the round-t trace, the realized masks/E become the scan operands,
 and latency/cost/energy vectorize over trace × schedule — a fading or
 straggler campaign is still one compiled scan with one host transfer.
+
+Fault tolerance (``repro.launch.resilience`` documents the failure model
+and checkpoint layout): a ``faults:p`` scenario's poison/wire-corruption
+channels become extra scan operands feeding the engine round's fault
+injection, its server-crash channel holds the round in the scan body, and
+``RoundGuards`` (auto-armed whenever the trace injects faults) roll back
+non-finite aggregates in-scan — still one compiled program, one transfer.
+``checkpoint_every``/``checkpoint_dir``/``resume`` split the scan at
+checkpoint boundaries and persist/restore the full campaign carry so a
+SIGKILLed campaign resumes bit-exactly.
 """
 from __future__ import annotations
 
 import contextlib
 from dataclasses import dataclass
+from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -119,10 +130,34 @@ class CampaignResult:
     accuracy: Optional[np.ndarray] = None   # (n_seeds,) if test_data given
     accuracy_per_round: Optional[np.ndarray] = None  # (rounds, n_seeds), NaN
     # off eval rounds (scan mode with test_data / eval_every)
+    # Guarded-campaign accounting (None when guards are off; see
+    # repro.launch.resilience for the failure model):
+    skipped_per_round: Optional[np.ndarray] = None  # (R, S) 0/1 non-finite
+    # rollbacks, quorum holds, and (R,) server-crash injections
+    quorum_per_round: Optional[np.ndarray] = None   # (R, S)
+    crashed_per_round: Optional[np.ndarray] = None  # (R,)
 
     def params_for(self, i: int):
         """The i-th seed's params tuple (unstacked)."""
         return jax.tree.map(lambda p: p[i], self.params)
+
+    @property
+    def skipped_rounds(self) -> int:
+        """Total non-finite round rollbacks across all seeds."""
+        return (0 if self.skipped_per_round is None
+                else int(self.skipped_per_round.sum()))
+
+    @property
+    def quorum_rounds(self) -> int:
+        """Total quorum hold-rounds across all seeds."""
+        return (0 if self.quorum_per_round is None
+                else int(self.quorum_per_round.sum()))
+
+    @property
+    def crashed_rounds(self) -> int:
+        """Rounds lost to injected server crashes (seed-invariant)."""
+        return (0 if self.crashed_per_round is None
+                else int(self.crashed_per_round.sum()))
 
 
 def plan_schedule(framework: str, sp: SystemParams, cfg: DNNConfig,
@@ -214,7 +249,26 @@ def _plan_segments(kb_r: Sequence[int], eb_r: Sequence[int]
     return segs
 
 
-def _make_metrics(sched, comm, nsel, sim, cost, energy, losses, acc_rounds
+def _split_at_checkpoints(segs, every: Optional[int]
+                          ) -> List[Tuple[int, int, int, int]]:
+    """Additionally split the (kb, eb, start, length) runs at global rounds
+    divisible by ``every``, so every checkpoint boundary lands exactly on a
+    segment edge.  Numerically free: per-round computation depends only on
+    the (kb, eb) shape buckets, which splitting leaves untouched."""
+    if not every:
+        return segs
+    out = []
+    for kb, eb, start, length in segs:
+        r, end = start, start + length
+        while r < end:
+            nxt = min(end, (r // every + 1) * every)
+            out.append((kb, eb, r, nxt - r))
+            r = nxt
+    return out
+
+
+def _make_metrics(sched, comm, nsel, sim, cost, energy, losses, acc_rounds,
+                  skipped=None, quorum=None, crashed=None
                   ) -> List[RoundMetrics]:
     metrics = []
     for r in range(sched.rounds):
@@ -227,7 +281,11 @@ def _make_metrics(sched, comm, nsel, sim, cost, energy, losses, acc_rounds
             cost=float(cost[r]), energy=float(energy[r]), accuracy=acc_r,
             client_loss=float(losses[:, r, 0].mean()),
             server_loss=float(losses[:, r, 1].mean())
-            if losses.shape[-1] > 1 else float("nan")))
+            if losses.shape[-1] > 1 else float("nan"),
+            skipped=float(skipped[r].mean()) if skipped is not None else 0.0,
+            quorum_held=float(quorum[r].mean()) if quorum is not None
+            else 0.0,
+            crashed=float(crashed[r]) if crashed is not None else 0.0))
     return metrics
 
 
@@ -240,7 +298,10 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
                  eval_gamma: float = 1e-3, strict_transfers: bool = False,
                  policy=None, quant=None,
                  scenario: scen.ScenarioLike = None,
-                 scenario_seed: int = 0, **hyper) -> CampaignResult:
+                 scenario_seed: int = 0, guards=None,
+                 checkpoint_every: Optional[int] = None,
+                 checkpoint_dir=None, resume: bool = False,
+                 _checkpoint_hook=None, **hyper) -> CampaignResult:
     """Train `len(seeds)` independent runs of `framework` in one compiled
     scan-over-rounds, vmapped over the seed axis.
 
@@ -285,6 +346,22 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
     transfer (``strict_transfers`` holds with scenarios on).  Note the
     caller partitions ``client_data`` — for a ``noniid`` scenario build it
     with ``scenario.partition_for`` (Dirichlet α rides on the trace).
+
+    Fault tolerance (``repro.launch.resilience``): a ``faults:p``
+    scenario's poison / wire-corruption / server-crash channels are
+    injected inside the scan, and ``guards`` (an ``engine.RoundGuards``;
+    ``None`` auto-arms the defaults whenever the trace injects faults,
+    ``False`` forces them off) adds the in-scan non-finite rollback,
+    quorum hold and optional per-client norm clip — the campaign stays one
+    compiled program with one host transfer.  ``checkpoint_every`` +
+    ``checkpoint_dir`` persist the full campaign carry every that-many
+    rounds (atomic manifests; each save is an explicit extra device pull,
+    so it excludes ``strict_transfers``); ``resume=True`` restores the
+    newest committed checkpoint from ``checkpoint_dir`` (validated against
+    the replanned schedule's fingerprint) and re-enters the scan at the
+    next segment, bit-exactly.  ``_checkpoint_hook(round_cursor)``, if
+    given, runs after each committed save (crash-injection drivers and
+    tests hang their abort/kill timing on it).
     """
     x = jnp.asarray(client_data["x"])
     y = jnp.asarray(client_data["y"])
@@ -309,6 +386,24 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
                             policy=policy, quant=quant, **hyper)
     comm, nsel, sim, cost, energy = _schedule_system_metrics(spec, sched, sp)
 
+    trace = sched.trace
+    has_faults = trace is not None and trace.has_faults()
+    if guards is None and has_faults:
+        guards = engine.RoundGuards()       # faults auto-arm the defaults
+    elif guards is False or guards is None:
+        guards = None
+    if checkpoint_every or checkpoint_dir or resume:
+        if not (checkpoint_every and checkpoint_dir is not None):
+            raise ValueError("checkpointing needs BOTH checkpoint_every "
+                             "and checkpoint_dir (resume implies both)")
+        if not scan:
+            raise ValueError("checkpoint/resume requires scan=True (the "
+                             "python loop has no segment boundaries)")
+        if strict_transfers:
+            raise ValueError("checkpoint_every is incompatible with "
+                             "strict_transfers: each segment save is an "
+                             "explicit device→host pull")
+
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec as P
         csh = NamedSharding(mesh, P(engine.client_axes(mesh)))
@@ -321,6 +416,9 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
             raise ValueError("eval_every (fused per-round eval) requires "
                              "scan=True; the python loop only evaluates "
                              "post-hoc")
+        if has_faults or guards is not None:
+            raise ValueError("fault injection / RoundGuards require "
+                             "scan=True (the guards live inside the scan)")
         losses, params = _run_rounds_loop(spec, cfg, sp, sched, x, y, seeds)
         result = CampaignResult(
             framework=framework, seeds=tuple(seeds), schedule=sched,
@@ -343,22 +441,54 @@ def run_campaign(framework: str, cfg: DNNConfig, sp: SystemParams,
             do_eval[eval_every - 1::eval_every] = 1.0
         do_eval[rounds - 1] = 1.0
 
+    ckpt = None
+    if checkpoint_every:
+        from repro.launch import resilience
+        fp = resilience.schedule_fingerprint(
+            framework, seeds, sched, do_eval=do_eval,
+            quant_mode=spec.quant.mode, checkpoint_every=checkpoint_every)
+        resume_from = None
+        if resume:
+            resume_from = resilience.latest_checkpoint(checkpoint_dir)
+            if resume_from is not None:
+                meta = resilience.load_checkpoint_meta(resume_from)
+                if meta.get("fingerprint") != fp:
+                    raise ValueError(
+                        f"checkpoint {resume_from} was written by a "
+                        f"different campaign plan (schedule fingerprint "
+                        f"mismatch); refusing to resume")
+        ckpt = {"dir": checkpoint_dir, "every": int(checkpoint_every),
+                "fingerprint": fp, "resume_from": resume_from,
+                "hook": _checkpoint_hook, "framework": framework,
+                "n_seeds": len(seeds)}
+
     guard = (jax.transfer_guard_device_to_host("disallow")
              if strict_transfers else contextlib.nullcontext())
     with guard:
         params, buffers = _run_rounds_scan(
-            spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn, mesh)
+            spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn, mesh,
+            guards=guards, ckpt=ckpt)
     host = _host_fetch(buffers)            # THE per-campaign transfer
 
     live = host["live"] > 0
     losses = np.transpose(host["loss"][live], (1, 0, 2))   # (S, R, n_ph)
     acc_rounds = np.asarray(host["acc"][live])             # (R, S)
+    skipped = quorum = crashed = None
+    if guards is not None:
+        skipped = np.asarray(host["skipped"][live])        # (R, S)
+        quorum = np.asarray(host["quorum"][live])          # (R, S)
+    if trace is not None and trace.crash is not None:
+        crashed = (np.asarray(trace.crash[:rounds]) > 0).astype(np.float64)
     result = CampaignResult(
         framework=framework, seeds=tuple(seeds), schedule=sched,
         params=params, losses=losses,
         metrics=_make_metrics(sched, comm, nsel, sim, cost, energy, losses,
-                              acc_rounds if test_data is not None else None),
-        accuracy_per_round=acc_rounds if test_data is not None else None)
+                              acc_rounds if test_data is not None else None,
+                              skipped=skipped, quorum=quorum,
+                              crashed=crashed),
+        accuracy_per_round=acc_rounds if test_data is not None else None,
+        skipped_per_round=skipped, quorum_per_round=quorum,
+        crashed_per_round=crashed)
     if test_data is not None:
         result.accuracy = acc_rounds[rounds - 1]
     return result
@@ -414,19 +544,31 @@ def _run_rounds_loop(spec, cfg, sp, sched, x, y, seeds):
 
 
 def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
-                     mesh):
+                     mesh, guards=None, ckpt=None):
     """Scan all rounds on-device; returns (params, device metric buffers).
 
     The buffers carry everything that EXISTS on the device — per-round
-    per-seed losses and fused-eval accuracies (plus the live mask); the
-    remaining per-round metrics (comm_bits, selected-count, latency, cost)
-    are schedule constants already precomputed host-side by
+    per-seed losses and fused-eval accuracies (plus the live mask; under
+    guards also the per-seed skipped/quorum flags); the remaining
+    per-round metrics (comm_bits, selected-count, latency, cost) are
+    schedule constants already precomputed host-side by
     ``_schedule_system_metrics`` and never touch the device.
 
     Rounds sharing a (cohort-bucket, E-bucket) shape form contiguous scan
     segments; segment lengths are bucketed as well, padded with ``live=0``
     no-op rounds, so the number of compiled scans is bounded even for
-    adaptive-E / varying-cohort schedules."""
+    adaptive-E / varying-cohort schedules.
+
+    ``guards`` (engine.RoundGuards) and the schedule trace's fault
+    channels arm the robust scan body: poison/wire-corruption rows become
+    extra scan operands feeding the round's fault injection, a crash round
+    holds params/qstate (clients still advance their RNG — they trained;
+    the server lost the aggregate), and the round's guard flags land in
+    the buffers.  ``ckpt`` (dict from ``run_campaign``: dir / every /
+    fingerprint / resume_from / hook) splits segments at checkpoint
+    boundaries, persists the carry after each boundary via
+    ``repro.launch.resilience`` and, on resume, restores it and skips the
+    completed segments."""
     rounds = sched.rounds
     n_seeds = len(seeds)
     counts = sched.a.sum(axis=1).astype(int)
@@ -438,9 +580,23 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
         kb_r = [int(sp.M)] * rounds       # sharded rounds train the full
         # masked M axis (a gather would break the static client sharding)
     eb_r = [e_of[int(e)] for e in sched.E]
-    segs = _plan_segments(kb_r, eb_r)
+    segs = _split_at_checkpoints(_plan_segments(kb_r, eb_r),
+                                 ckpt["every"] if ckpt else None)
     len_of = _bucket_cohorts([l for *_ , l in segs],
                              max(l for *_, l in segs))
+
+    trace = sched.trace
+    poison = trace.poison if trace is not None else None
+    wire = trace.wire_gain if trace is not None else None
+    crash = trace.crash if trace is not None else None
+    with_faults = poison is not None or wire is not None
+    has_crash = crash is not None and bool(np.any(np.asarray(crash) > 0))
+    robust = guards is not None or with_faults or has_crash
+    M = int(sp.M)
+    p_arr = (np.zeros((rounds, M), np.float32) if poison is None
+             else np.asarray(poison, np.float32))
+    w_arr = (np.ones((rounds, M), np.float32) if wire is None
+             else np.asarray(wire, np.float32))
 
     n_ph = len(spec.phases)
     fns: Dict[Tuple[int, int, int], Any] = {}
@@ -450,20 +606,36 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
             return fns[kb, eb, lb]
         if mesh is None:
             raw = engine.build_round_fn(spec, cfg, x, y, e_max=max(1, eb),
-                                        jit=False, gather=True)
+                                        jit=False, gather=True,
+                                        guards=guards,
+                                        with_faults=with_faults)
 
             def call_round(params, xr, subs, qstate):
-                return jax.vmap(raw, in_axes=(0, None, None, None, 0, 0))(
-                    params, xr["idx"], xr["mask"], xr["e"], subs, qstate)
+                if not with_faults:
+                    return jax.vmap(
+                        raw, in_axes=(0, None, None, None, 0, 0))(
+                        params, xr["idx"], xr["mask"], xr["e"], subs,
+                        qstate)
+                faults = {"poison": xr["poison"], "wire_gain": xr["wire"]}
+                return jax.vmap(
+                    raw, in_axes=(0, None, None, None, 0, 0, None))(
+                    params, xr["idx"], xr["mask"], xr["e"], subs, qstate,
+                    faults)
         else:
             raw = engine.build_sharded_round_fn(
-                spec, cfg, mesh, n_clients=int(sp.M), e_max=max(1, eb),
-                jit=False)
+                spec, cfg, mesh, n_clients=M, e_max=max(1, eb),
+                jit=False, guards=guards, with_faults=with_faults)
 
             def call_round(params, xr, subs, qstate):
+                if not with_faults:
+                    return jax.vmap(
+                        raw, in_axes=(0, None, None, None, None, 0, 0))(
+                        params, x, y, xr["mask"], xr["e"], subs, qstate)
+                faults = {"poison": xr["poison"], "wire_gain": xr["wire"]}
                 return jax.vmap(
-                    raw, in_axes=(0, None, None, None, None, 0, 0))(
-                    params, x, y, xr["mask"], xr["e"], subs, qstate)
+                    raw, in_axes=(0, None, None, None, None, 0, 0, None))(
+                    params, x, y, xr["mask"], xr["e"], subs, qstate,
+                    faults)
 
         nan_row = jnp.full((n_seeds,), jnp.nan, jnp.float32)
 
@@ -471,23 +643,34 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
             params, keys, qstate = carry
             ks = jax.vmap(jax.random.split)(keys)
             nkeys, subs = ks[:, 0], ks[:, 1]
-            nparams, phase_losses, nqstate = call_round(params, xr, subs,
-                                                        qstate)
+            out = call_round(params, xr, subs, qstate)
+            if guards is not None:
+                nparams, phase_losses, nqstate, flags = out
+            else:
+                nparams, phase_losses, nqstate = out
+                flags = None
             live = xr["live"] > 0
-            params = jax.tree.map(lambda n, o: jnp.where(live, n, o),
+            # a crash round is lost server-side: params/EF hold, clients
+            # still advanced their RNG (they did train), losses are NaN
+            ran = (jnp.logical_and(live, xr["crash"] <= 0) if robust
+                   else live)
+            params = jax.tree.map(lambda n, o: jnp.where(ran, n, o),
                                   nparams, params)
-            qstate = jax.tree.map(lambda n, o: jnp.where(live, n, o),
+            qstate = jax.tree.map(lambda n, o: jnp.where(ran, n, o),
                                   nqstate, qstate)
             keys = jnp.where(live, nkeys, keys)
-            loss_row = jnp.where(live, jnp.stack(phase_losses, -1), jnp.nan)
+            loss_row = jnp.where(ran, jnp.stack(phase_losses, -1), jnp.nan)
             if eval_fn is None:
                 acc = nan_row
             else:
                 acc = jax.lax.cond(
                     jnp.logical_and(xr["do_eval"] > 0, live),
                     jax.vmap(eval_fn), lambda p: nan_row, params)
-            return (params, keys, qstate), {"loss": loss_row, "acc": acc,
-                                            "live": xr["live"]}
+            ys = {"loss": loss_row, "acc": acc, "live": xr["live"]}
+            if guards is not None:
+                ys["skipped"] = jnp.where(ran, flags["skipped"], 0.0)
+                ys["quorum"] = jnp.where(ran, flags["quorum"], 0.0)
+            return (params, keys, qstate), ys
 
         def seg(params, key_arr, qstate, xs):
             return jax.lax.scan(body, (params, key_arr, qstate), xs)
@@ -501,7 +684,29 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
     params = jax.vmap(spec.init_fn)(init_keys)
     qstate = _init_qstate(spec, params, mesh)
     ys_all = []
+    start_round = 0
+    if ckpt is not None and ckpt["resume_from"] is not None:
+        from repro.checkpoint import io
+        path = ckpt["resume_from"]
+        like = {"params": params, "keys": key_arr, "qstate": qstate}
+        if mesh is not None:
+            # the acceptance-pinned mesh resume: params land replicated
+            # through the checkpoint layer's shardings= path
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            rep = jax.tree.map(lambda _: NamedSharding(mesh, P()), like)
+            state = io.restore(path, like, shardings=rep)
+        else:
+            state = io.restore(path, like)
+        params, key_arr, qstate = \
+            state["params"], state["keys"], state["qstate"]
+        buf = io.load_arrays(Path(path).with_name(Path(path).name
+                                                  + "-buffers"))
+        ys_all.append({k: jnp.asarray(v) for k, v in buf.items()})
+        start_round = int(
+            io.manifest(path)["metadata"]["round_cursor"])
     for kb, eb, start, length in segs:
+        if start + length <= start_round:
+            continue                       # restored from the checkpoint
         lb = len_of[length]
         xs = {
             "e": np.zeros(lb, np.int32),
@@ -511,6 +716,10 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
         xs["e"][:length] = sched.E[start:start + length]
         xs["live"][:length] = 1.0
         xs["do_eval"][:length] = do_eval[start:start + length]
+        if robust:
+            xs["crash"] = np.zeros(lb, np.float32)
+            if has_crash:
+                xs["crash"][:length] = crash[start:start + length]
         if mesh is None:
             idx = np.zeros((lb, kb), np.int32)
             mask = np.zeros((lb, kb), np.float32)
@@ -519,13 +728,42 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
                 idx[i, :k_r] = np.nonzero(sched.a[r])[0]  # pads: client 0,
                 mask[i, :k_r] = 1.0                       # mask weight 0
             xs["idx"], xs["mask"] = idx, mask
+            if with_faults:
+                # gather the fault channels by the same cohort index;
+                # pads stay neutral (poison 0, gain 1 — and carry mask 0)
+                pz = np.zeros((lb, kb), np.float32)
+                wg = np.ones((lb, kb), np.float32)
+                for i, r in enumerate(range(start, start + length)):
+                    k_r = int(counts[r])
+                    pz[i, :k_r] = p_arr[r, idx[i, :k_r]]
+                    wg[i, :k_r] = w_arr[r, idx[i, :k_r]]
+                xs["poison"], xs["wire"] = pz, wg
         else:
-            mask = np.zeros((lb, int(sp.M)), np.float32)
+            mask = np.zeros((lb, M), np.float32)
             mask[:length] = sched.a[start:start + length]
             xs["mask"] = mask
+            if with_faults:
+                pz = np.zeros((lb, M), np.float32)
+                wg = np.ones((lb, M), np.float32)
+                pz[:length] = p_arr[start:start + length]
+                wg[:length] = w_arr[start:start + length]
+                xs["poison"], xs["wire"] = pz, wg
         (params, key_arr, qstate), ys = seg_exec(kb, eb, lb)(
             params, key_arr, qstate, xs)
         ys_all.append(ys)
+        end = start + length
+        if ckpt is not None and (end % ckpt["every"] == 0 or end == rounds):
+            from repro.launch import resilience
+            done = {k: (jnp.concatenate([ys[k] for ys in ys_all], axis=0)
+                        if len(ys_all) > 1 else ys_all[0][k])
+                    for k in ys_all[0]}
+            resilience.save_checkpoint(
+                ckpt["dir"], end,
+                {"params": params, "keys": key_arr, "qstate": qstate},
+                done, fingerprint=ckpt["fingerprint"], rounds=rounds,
+                framework=ckpt["framework"], n_seeds=ckpt["n_seeds"])
+            if ckpt["hook"] is not None:
+                ckpt["hook"](end)
 
     buffers = {k: (jnp.concatenate([ys[k] for ys in ys_all], axis=0)
                    if len(ys_all) > 1 else ys_all[0][k])
@@ -604,6 +842,11 @@ def run_config_sweep(framework: str, cfg: DNNConfig,
                              f"M={x.shape[0]} to share one schedule shape")
     sps = [sp_d for sp_d, _ in planned]
     scheds = [sch for _, sch in planned]
+    for sch in scheds:
+        if sch.trace is not None and sch.trace.has_faults():
+            raise ValueError("fault-injection scenarios are not supported "
+                             "by the vmapped config sweep; use "
+                             "vmap_configs=False (per-variant campaigns)")
     V, S = len(planned), len(seeds)
     a_all = np.stack([sch.a for sch in scheds]).astype(np.float32)  # (V,R,M)
     e_all = np.stack([sch.E for sch in scheds]).astype(np.int32)    # (V,R)

@@ -1,0 +1,206 @@
+"""Fault-tolerant campaign runtime: checkpoint/resume + failure model.
+
+The scanned campaign (``repro.launch.campaign``) is one compiled
+scan-over-rounds — fast, but historically all-or-nothing: a preempted
+runner, an OOM-killed process or a NaN blow-up lost the entire multi-seed
+run.  This module makes the runtime itself survive failure, in three
+layers that compose:
+
+FAILURE MODEL (what can go wrong, what we do about it)
+======================================================
+
+* **Process death** (SIGKILL, preemption, power loss) — handled by
+  SEGMENTED CHECKPOINTING.  The campaign's round scan is split into
+  ``checkpoint_every``-round segments along the existing
+  (cohort-bucket, E-bucket) compile boundaries; after each boundary the
+  full campaign carry — per-seed params, per-seed RNG keys, the CommQuant
+  error-feedback ``qstate``, and the device-resident loss/accuracy metric
+  buffers accumulated so far — is persisted through ``repro.checkpoint.io``
+  (atomic: the json manifest is renamed into place LAST, so a manifest on
+  disk always points at a complete payload).  ``resume_campaign`` replans
+  the schedule deterministically, validates it against the checkpoint's
+  schedule fingerprint, restores the carry (under a mesh, through the
+  existing ``shardings=`` path) and re-enters the scan at the next
+  segment.  Resumed == uninterrupted, bit-exactly (test-pinned): the
+  per-round numerics never depended on segment lengths (padded rounds are
+  exact no-ops), and both RNG chains and EF state ride in the checkpoint.
+
+* **Poisoned client updates** (NaN/Inf uploads: device OOM, driver bug,
+  adversary) — injected by the ``faults:p`` scenario family
+  (``repro.core.scenario``), guarded by the NON-FINITE ROLLBACK: the round
+  checks ``isfinite`` on the AGGREGATED update inside the scan and, on
+  failure, holds the previous params and EF state.  The round counts
+  toward ``CampaignResult.skipped_rounds``.
+
+* **Corrupted wire payloads** (exponent-bit flips on the quantized
+  upload, modeled as a ±2^12 per-client gain) — injected by the same
+  trace family; bounded by the optional NORM-CLIPPING robust aggregation
+  (``RoundGuards.clip_norm``) applied per client at the
+  quantize-before-psum point.  A clipped corrupt update perturbs, but
+  cannot dominate, the round.
+
+* **Server-crash rounds** (the runner dies mid-round and the round's
+  aggregate never lands) — injected as the trace's ``crash`` channel and
+  realized in the campaign scan as a HOLD-ROUND: params/qstate keep their
+  values, clients' RNG streams still advance (the clients did train), the
+  round's loss row is NaN, and the round counts toward
+  ``crashed_rounds``.
+
+* **Cohort collapse** (churn/dropout leaves |A_t| below a usable quorum)
+  — guarded by ``RoundGuards.min_clients``: the round degrades to a hold
+  instead of averaging over a near-empty cohort, counted in
+  ``quorum_rounds``.
+
+All guards run INSIDE the compiled scan (``engine._round_core``), so a
+guarded fault-injection campaign is still ONE compiled program with ONE
+device→host transfer (the transfer-guard test pins this with guards on).
+Checkpointing is the sole, explicitly opted-in exception: each segment
+boundary save is a device pull, which is why ``checkpoint_every`` and
+``strict_transfers`` are mutually exclusive.
+
+CHECKPOINT FILE LAYOUT
+======================
+
+Inside ``checkpoint_dir`` each boundary at global round ``r`` writes, in
+this order (commit point last):
+
+* ``ckpt-r{r:06d}-buffers.npz`` / ``.json`` — the flat metric-buffer dict
+  (``loss``/``acc``/``live`` and, under guards, ``skipped``/``quorum``
+  rows for rounds ``[0, r)``), restored shape-blind via
+  ``checkpoint.io.load_arrays``.
+* ``ckpt-r{r:06d}.npz`` / ``.json`` — the campaign carry
+  ``{"params": ..., "keys": ..., "qstate": ...}`` plus manifest metadata
+  ``{fingerprint, round_cursor, rounds, framework, n_seeds}``.  This
+  manifest is the checkpoint's COMMIT POINT: resume only ever selects
+  boundaries whose carry manifest exists, and the buffer files are
+  written strictly before it.
+
+The ``fingerprint`` hashes everything the replanned schedule must
+reproduce for a bit-exact splice — framework, seeds, the realized
+A_t/b_t/E_t schedule, the eval mask, the quant wire format, the fault
+channels and ``checkpoint_every`` — so resuming against a drifted plan
+fails loudly instead of silently diverging.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import RoundGuards  # re-export: the guard knobs
+from repro.checkpoint import io
+
+__all__ = ["RoundGuards", "CampaignAborted", "schedule_fingerprint",
+           "checkpoint_tag", "latest_checkpoint", "save_checkpoint",
+           "load_checkpoint_meta", "resume_campaign", "wait_for_checkpoint"]
+
+
+class CampaignAborted(RuntimeError):
+    """Raised by a checkpoint hook to simulate a crash in-process (tests);
+    the on-disk checkpoints are valid and the campaign is resumable."""
+
+
+def checkpoint_tag(round_cursor: int) -> str:
+    return f"ckpt-r{round_cursor:06d}"
+
+
+def schedule_fingerprint(framework: str, seeds, sched, *, do_eval,
+                         quant_mode: str, checkpoint_every: int) -> str:
+    """Digest of everything a resume must replan identically (see module
+    docstring).  ``sched`` is a ``campaign.RoundSchedule``."""
+    h = hashlib.sha256()
+    h.update(framework.encode())
+    h.update(np.asarray(sorted(int(s) for s in seeds), np.int64).tobytes())
+    h.update(quant_mode.encode())
+    h.update(np.asarray(int(checkpoint_every), np.int64).tobytes())
+    for arr in (sched.a, sched.b, sched.E, do_eval):
+        h.update(np.ascontiguousarray(np.asarray(arr, np.float64)).tobytes())
+    tr = sched.trace
+    for ch in ((tr.poison, tr.crash, tr.wire_gain) if tr is not None
+               else (None, None, None)):
+        h.update(b"\0" if ch is None else
+                 np.ascontiguousarray(np.asarray(ch, np.float64)).tobytes())
+    return h.hexdigest()
+
+
+def save_checkpoint(checkpoint_dir, round_cursor: int, state, buffers,
+                    *, fingerprint: str, rounds: int, framework: str,
+                    n_seeds: int) -> Path:
+    """Persist one segment boundary (buffers first, carry manifest last —
+    the commit point).  ``state`` is ``{"params", "keys", "qstate"}``;
+    ``buffers`` a flat dict of metric rows for rounds ``[0, cursor)``.
+    Returns the carry checkpoint path (suffix-less, as ``io`` wants)."""
+    d = Path(checkpoint_dir)
+    tag = checkpoint_tag(round_cursor)
+    io.save(d / (tag + "-buffers"), dict(buffers),
+            metadata={"round_cursor": round_cursor})
+    io.save(d / tag, state, metadata={
+        "fingerprint": fingerprint, "round_cursor": round_cursor,
+        "rounds": rounds, "framework": framework, "n_seeds": n_seeds})
+    return d / tag
+
+
+def latest_checkpoint(checkpoint_dir) -> Optional[Path]:
+    """The newest COMMITTED checkpoint in ``checkpoint_dir`` (the carry
+    manifest with the highest round cursor), or None when the directory
+    holds none.  Tolerates a torn tail: a ``*.tmp.*`` sibling or a
+    missing buffers file (crash between the two saves) disqualifies only
+    that boundary."""
+    d = Path(checkpoint_dir)
+    if not d.is_dir():
+        return None
+    best = None
+    for man in sorted(d.glob("ckpt-r*.json")):
+        if man.stem.endswith("-buffers") or ".tmp" in man.name:
+            continue
+        base = man.with_suffix("")
+        buf = base.with_name(base.name + "-buffers")
+        if not (base.with_suffix(".npz").exists()
+                and buf.with_suffix(".npz").exists()
+                and buf.with_suffix(".json").exists()):
+            continue
+        try:
+            cursor = int(io.manifest(base)["metadata"]["round_cursor"])
+        except (json.JSONDecodeError, KeyError, ValueError):
+            continue
+        if best is None or cursor > best[0]:
+            best = (cursor, base)
+    return best[1] if best else None
+
+
+def load_checkpoint_meta(path) -> dict:
+    """Manifest metadata of a carry checkpoint path."""
+    return io.manifest(path)["metadata"]
+
+
+def wait_for_checkpoint(checkpoint_dir, *, timeout: float = 120.0,
+                        poll: float = 0.05) -> Optional[Path]:
+    """Block until ``checkpoint_dir`` holds a committed checkpoint (the
+    crash-injection driver uses this to time its SIGKILL)."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        found = latest_checkpoint(checkpoint_dir)
+        if found is not None:
+            return found
+        time.sleep(poll)
+    return None
+
+
+def resume_campaign(framework, cfg, sp, client_data, *, checkpoint_dir,
+                    checkpoint_every: int, **kwargs):
+    """Resume (or start) a checkpointed campaign from ``checkpoint_dir``.
+
+    A thin, intention-revealing wrapper over ``campaign.run_campaign``:
+    the deterministic replan, fingerprint validation, carry restore and
+    segment skip all live on the campaign runner's checkpoint path.  With
+    no committed checkpoint in the directory this is a fresh (still
+    checkpointed) run, so crash-loop supervisors can call it blindly."""
+    from repro.launch.campaign import run_campaign
+    return run_campaign(framework, cfg, sp, client_data,
+                        checkpoint_dir=checkpoint_dir,
+                        checkpoint_every=checkpoint_every, resume=True,
+                        **kwargs)

@@ -27,6 +27,44 @@ def test_shape_mismatch_raises(tmp_path):
                    {"w": jax.ShapeDtypeStruct((4,), jnp.float32)})
 
 
+def test_atomic_save_leaves_no_tmp_files(tmp_path):
+    """The tmp siblings are renamed into place; only the committed pair
+    remains (a crash mid-save can leave a tmp, never a torn manifest)."""
+    io.save(tmp_path / "ckpt", {"w": jnp.zeros((3,))})
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names == ["ckpt.json", "ckpt.npz"]
+    # overwriting goes through the same tmp+rename path
+    io.save(tmp_path / "ckpt", {"w": jnp.ones((3,))})
+    assert sorted(p.name for p in tmp_path.iterdir()) == names
+    back = io.restore(tmp_path / "ckpt",
+                      {"w": jax.ShapeDtypeStruct((3,), jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(back["w"]), np.ones(3))
+
+
+def test_key_mismatch_lists_missing_and_extra(tmp_path):
+    """A restore structure mismatch names the exact keys instead of dying
+    on a raw npz KeyError."""
+    io.save(tmp_path / "c3", {"w": jnp.zeros((3,)), "old": jnp.zeros((2,))})
+    like = {"w": jax.ShapeDtypeStruct((3,), jnp.float32),
+            "brand_new": jax.ShapeDtypeStruct((2,), jnp.float32)}
+    with pytest.raises(ValueError) as ei:
+        io.restore(tmp_path / "c3", like)
+    msg = str(ei.value)
+    assert "missing keys ['brand_new']" in msg
+    assert "extra keys ['old']" in msg
+
+
+def test_load_arrays_flat_dict(tmp_path):
+    """Shape-blind payload loading (the campaign runner restores its
+    metric buffers this way — shapes depend on rounds completed)."""
+    io.save(tmp_path / "buf", {"loss": jnp.arange(6.0).reshape(2, 3),
+                               "live": jnp.ones((2,))})
+    flat = io.load_arrays(tmp_path / "buf")
+    assert sorted(flat) == ["live", "loss"]
+    np.testing.assert_array_equal(flat["loss"],
+                                  np.arange(6.0).reshape(2, 3))
+
+
 def test_splitme_state_roundtrip(tmp_path):
     from repro.configs.splitme_dnn import DNN10
     from repro.core import dnn
