@@ -50,6 +50,15 @@ evaluation — ``--eval-every K`` evaluates every K rounds inside the scan)
 stay on the device until ONE final host transfer, and the per-seed final
 accuracies are reported (mean ± std) — the multi-seed error bars the paper
 omits.
+
+``--population M`` switches to the POPULATION campaign
+(``repro.launch.campaign.run_population_campaign``): M virtual clients —
+millions are fine — described by a parameterized ``Population``
+distribution; each round samples a ``--cohort C`` cohort and lazily
+realizes only those C clients' SystemParams rows, trace channels and data
+shards, so memory stays O(cohort) instead of O(M).  Combine with
+``--scenario churn:0.5`` to let the registered population size itself vary
+round to round.  Requires --seeds N > 1 (population mode is scanned-only).
 """
 import argparse
 import copy
@@ -115,7 +124,17 @@ def main():
                     help="resume the campaign from the newest committed "
                          "checkpoint in --checkpoint-dir (bit-exact; "
                          "fresh start when the directory is empty)")
+    ap.add_argument("--population", type=int, default=None,
+                    help="population mode: train over M virtual clients "
+                         "(millions are fine) sampling a --cohort per "
+                         "round; memory is O(cohort), not O(M)")
+    ap.add_argument("--cohort", type=int, default=32,
+                    help="population mode: clients sampled per round "
+                         "(default 32)")
     args = ap.parse_args()
+    if args.population is not None and args.seeds <= 1:
+        ap.error("--population needs the scanned campaign runner "
+                 "(--seeds N with N > 1)")
     if (args.resume or args.checkpoint_every) and args.seeds <= 1:
         ap.error("--checkpoint-every/--resume need the scanned campaign "
                  "runner (--seeds N with N > 1)")
@@ -142,6 +161,31 @@ def main():
     else:
         clients = oran.partition_non_iid(Xtr, ytr, sp.M,
                                          samples_per_client=96, seed=0)
+
+    if args.population is not None:
+        from repro.core import population as popn
+        from repro.launch import campaign
+
+        seeds = tuple(range(args.seeds))
+        pop = popn.Population(size=args.population, seed=0)
+        t0 = time.time()
+        res = campaign.run_population_campaign(
+            "splitme", DNN10, pop, (Xtr, ytr), rounds=args.rounds,
+            seeds=seeds, cohort=args.cohort, samples_per_client=96,
+            test_data=(Xte, yte), eval_every=args.eval_every,
+            policy=args.policy, quant=args.quant, scenario=args.scenario,
+            scenario_seed=args.scenario_seed,
+            checkpoint_every=args.checkpoint_every,
+            checkpoint_dir=(f"{ckpt_dir}/population"
+                            if args.checkpoint_every else None),
+            resume=args.resume)
+        acc = res.accuracy
+        print(f"[splitme/pop] {args.population:,} clients, cohort "
+              f"{args.cohort}, {len(seeds)} seeds x {args.rounds} rounds: "
+              f"acc={acc.mean():.3f}±{acc.std():.3f} "
+              f"comm={sum(m.comm_bits for m in res.metrics) / 8e6:.1f}MB "
+              f"wall={time.time() - t0:.0f}s")
+        return
 
     if args.seeds > 1:
         from repro.launch import campaign

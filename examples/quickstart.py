@@ -1,12 +1,14 @@
 """Quickstart: SplitMe on synthetic O-RAN slice traffic in ~30 seconds.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--rounds N]
 
-Runs 10 global rounds of the full pipeline — deadline-aware selection
-(Alg. 1), bandwidth/E allocation (P2), mutual-learning split training, and
-the final analytic inversion (Step 4) — then prints the combined model's
-test accuracy.
+Runs N global rounds (default 10) of the full pipeline — deadline-aware
+selection (Alg. 1), bandwidth/E allocation (P2), mutual-learning split
+training, and the final analytic inversion (Step 4) — then prints the
+combined model's test accuracy.
 """
+import argparse
+
 from repro.configs.splitme_dnn import DNN10
 from repro.core.cost import SystemParams
 from repro.core.splitme import SplitMeTrainer
@@ -14,6 +16,11 @@ from repro.data import oran
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rounds", type=int, default=10,
+                    help="global rounds to train (default 10)")
+    args = ap.parse_args()
+
     X, y = oran.generate(n_per_class=1000, seed=0)
     (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
     sp = SystemParams()
@@ -24,7 +31,7 @@ def main():
     trainer = SplitMeTrainer(DNN10, sp, clients, (Xte, yte), seed=0,
                              interactive=True)
     print("round | selected | E | comm MB | latency ms | client KL")
-    for k in range(10):
+    for k in range(args.rounds):
         m = trainer.run_round()
         print(f"{m.round:5d} | {m.n_selected:8d} | {m.E} |"
               f" {m.comm_bits / 8e6:7.2f} | {m.sim_time * 1e3:10.1f} |"

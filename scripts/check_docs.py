@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Docs drift gate: everything README/docs NAME must actually exist.
+
+    PYTHONPATH=src python scripts/check_docs.py
+
+Three checks over README.md and docs/*.md, so documentation cannot
+silently outlive the code it references:
+
+1. every ``import`` / ``from X import Y`` line inside a fenced python
+   code block that targets this repo's packages (``repro``,
+   ``benchmarks``) must import, and the imported names must exist;
+2. every backticked dotted reference like ``repro.core.population`` (or
+   ``repro.launch.campaign.run_campaign``) must resolve to a module or
+   a module attribute;
+3. every backticked repo path like ``scripts/ci.sh`` or
+   ``docs/architecture.md`` must exist on disk.
+
+Exit code 0 = clean; nonzero prints every failure.
+"""
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+PACKAGES = ("repro", "benchmarks")
+
+FENCE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
+IMPORT = re.compile(
+    r"^\s*(?:from\s+([\w.]+)\s+import\s+([\w ,*]+)|import\s+([\w.]+))",
+    re.MULTILINE)
+DOTTED = re.compile(r"`((?:%s)(?:\.\w+)+)`" % "|".join(PACKAGES))
+# backticked repo-relative paths: at least one '/', no spaces or URL scheme
+PATH_REF = re.compile(r"`([\w.-]+/[\w./-]+)`")
+
+
+def _import_module(name: str):
+    return importlib.import_module(name)
+
+
+def check_import_line(mod, names, errors, where):
+    try:
+        m = _import_module(mod)
+    except Exception as e:  # noqa: BLE001 — report, don't crash the gate
+        errors.append(f"{where}: import {mod!r} failed: {e!r}")
+        return
+    for n in names:
+        n = n.strip()
+        if n in ("", "*"):
+            continue
+        if not hasattr(m, n):
+            # ``from pkg import submodule`` — also valid
+            try:
+                _import_module(f"{mod}.{n}")
+            except Exception:
+                errors.append(f"{where}: {mod!r} has no attribute {n!r}")
+
+
+def check_dotted(ref: str, errors, where):
+    """Resolve a dotted ref as module, or module.attr on the longest
+    importable prefix."""
+    parts = ref.split(".")
+    if parts[-1] in ("md", "json", "py", "sh", "txt", "yml"):
+        return      # a backticked FILENAME (e.g. `benchmarks.md`), not code
+    for cut in range(len(parts), 0, -1):
+        try:
+            m = _import_module(".".join(parts[:cut]))
+        except Exception:
+            continue
+        obj = m
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            errors.append(f"{where}: dangling reference `{ref}` "
+                          f"({'.'.join(parts[:cut])} has no "
+                          f"{'.'.join(parts[cut:])!r})")
+        return
+    errors.append(f"{where}: no importable prefix of `{ref}`")
+
+
+def check_file(path: Path) -> list[str]:
+    errors: list[str] = []
+    text = path.read_text()
+    rel = path.relative_to(ROOT)
+    for lang, code in FENCE.findall(text):
+        if lang not in ("python", "py", ""):
+            continue
+        for m in IMPORT.finditer(code):
+            mod = m.group(1) or m.group(3)
+            if mod.split(".")[0] not in PACKAGES:
+                continue
+            names = (m.group(2) or "").split(",") if m.group(1) else [""]
+            check_import_line(mod, names, errors, str(rel))
+    # prose references — outside fences (fences checked above via imports)
+    prose = FENCE.sub("", text)
+    for ref in set(DOTTED.findall(prose)):
+        check_dotted(ref, errors, str(rel))
+    for p in set(PATH_REF.findall(prose)):
+        if not (ROOT / p).exists():
+            errors.append(f"{rel}: referenced path `{p}` does not exist")
+    return errors
+
+
+def main() -> int:
+    targets = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    errors: list[str] = []
+    for t in targets:
+        if t.exists():
+            errors.extend(check_file(t))
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"check_docs: OK ({len(targets)} files, all references resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

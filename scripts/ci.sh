@@ -6,9 +6,12 @@
 #   4. crash-resume check                   — SIGKILL a checkpointed
 #                                             campaign mid-run, resume,
 #                                             assert byte-identical metrics
-#   5. fast FL-framework bench              — refreshes BENCH_fl.json +
+#   5. docs checks                          — README/docs references must
+#                                             import/exist (check_docs.py)
+#                                             + quickstart smoke run
+#   6. fast FL-framework bench              — refreshes BENCH_fl.json +
 #                                             benchmarks/results/
-#   6. bench regression gate                — fresh --fast rounds/sec vs the
+#   7. bench regression gate                — fresh --fast rounds/sec vs the
 #                                             baseline (mode + per-framework)
 #
 #     sh scripts/ci.sh
@@ -16,7 +19,7 @@
 # .github/workflows/ci.yml runs this on push/PR with a matrix over
 # REPRO_PALLAS_INTERPRET={0,1} and uploads the bench artifacts.
 #
-# Baseline selection for stage 5: $BENCH_BASELINE (a runner-cached
+# Baseline selection for stage 6: $BENCH_BASELINE (a runner-cached
 # BENCH_fl.json restored by the workflow) when present — its env
 # fingerprint matches the runner, so the gate is ARMED on CI from the
 # second run on — else the committed BENCH_fl.json (armed locally, where
@@ -46,6 +49,10 @@ REPRO_PALLAS_INTERPRET=1 python -m pytest -q -m kernels
 
 echo "== crash-resume check (SIGKILL + resume, byte-identical) =="
 python scripts/crash_resume_check.py
+
+echo "== docs checks (references resolve + quickstart smoke) =="
+python scripts/check_docs.py
+python examples/quickstart.py --rounds 2
 
 echo "== benchmarks (fast, fl_frameworks) =="
 # snapshot the baselines BEFORE the run rewrites BENCH_fl.json

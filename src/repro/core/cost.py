@@ -137,7 +137,7 @@ def round_energy(a: np.ndarray, b: np.ndarray, E: int,
 
 
 def schedule_metrics(a: np.ndarray, b: np.ndarray, E: np.ndarray,
-                     sp: SystemParams, trace=None):
+                     sp: SystemParams, trace=None, rows=None):
     """Eq. 18 latency, eq. 20 cost and the EcoFL energy for a whole stacked
     schedule in ONE vectorized pass over trace × schedule.
 
@@ -148,11 +148,24 @@ def schedule_metrics(a: np.ndarray, b: np.ndarray, E: np.ndarray,
     scalar ``total_time``/``round_cost``/``round_energy`` of that round,
     so the campaign runner's metrics are identical to the serial
     trainers'.  Returns ``(sim_time, cost, energy)``, each ``(R,)``.
+
+    ``rows`` (exclusive with ``trace``) supplies ABSOLUTE per-round rows —
+    ``{"q_c", "q_s", "gain"}``, each ``(R, M)`` — for schedules whose
+    per-round client cohorts differ (the population runner: row m of round
+    t is whatever client the round-t cohort sampled, so a round-invariant
+    base doesn't exist).  ``sp`` still provides the scalar fields (B, rho,
+    S_m, omega, d_model_bits, powers).
     """
     a = np.asarray(a, np.float64)
     b = np.asarray(b, np.float64)
     E = np.asarray(E, np.float64)[:, None]                     # (R, 1)
-    if trace is None:
+    if rows is not None:
+        if trace is not None:
+            raise ValueError("pass either trace= or rows=, not both")
+        q_c = np.asarray(rows["q_c"], np.float64)
+        q_s = np.asarray(rows["q_s"], np.float64)
+        gain = np.asarray(rows["gain"], np.float64)
+    elif trace is None:
         q_c, q_s, gain = sp.Q_C[None], sp.Q_S[None], sp.G_m[None]
     else:
         q_c = sp.Q_C[None] * trace.qc_scale

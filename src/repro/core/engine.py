@@ -536,6 +536,50 @@ def build_round_fn(spec: FrameworkSpec, cfg: DNNConfig,
     return jax.jit(round_fn, donate_argnums=donate_args if donate else ())
 
 
+def build_cohort_round_fn(spec: FrameworkSpec, cfg: DNNConfig, *,
+                          e_max: int, donate: bool = True, jit: bool = True,
+                          policy: Optional[KernelPolicy] = None,
+                          guards: Optional[RoundGuards] = None):
+    """Compile one federated round whose client DATA ARRIVE AS ARGUMENTS —
+    the population-mode round (``repro.core.population``), where the
+    cohort changes every round so no fixed dataset can be closed over.
+
+    Returns ``round_fn(params_tuple, xc, yc, a_mask, e_steps, key, qstate)
+    -> (params_tuple, per_phase_losses, qstate)`` with ``xc`` a ``(C, n,
+    d)`` cohort batch, ``yc`` ``(C, n)`` labels and ``a_mask`` the ``(C,)``
+    selection mask over cohort POSITIONS.  Numerically this is exactly
+    ``build_round_fn(gather=False)`` over the same ``(C, n)`` data: the
+    per-position RNG streams are the identical ``n_phases × C`` split of
+    the round key, the masked aggregation and the quantize-before-psum
+    point are the shared ``_round_core``.  When the cohort IS the whole
+    population in id order, position == client id and the round reproduces
+    the materialized campaign bit-for-bit (the population parity test pins
+    this through whole campaigns).
+
+    ``guards`` arms the same in-scan protections as ``build_round_fn``
+    (the return grows the ``flags`` element); fault-channel injection is
+    materialized-only — population traces carry no fault channels."""
+    pol = _bound_policy(spec, policy)
+    n_ph = len(spec.phases)
+
+    def round_fn(params: ParamsTuple, xc, yc, a_mask, e_steps, key,
+                 qstate=()):
+        if pol.precision.is_mixed:
+            xc = xc.astype(pol.precision.compute_dtype)
+        C, n = xc.shape[0], xc.shape[1]
+        runners = [_phase_runner(ph, n, spec.batch_size, e_max)
+                   for ph in spec.phases]
+        ctx_c = {"x": xc, "y": yc, "y1": jax.nn.one_hot(yc, cfg.n_classes)}
+        keys = jax.random.split(key, n_ph * C).reshape(n_ph, C, -1)
+        qkey = _quant_key(spec, key)
+        return _round_core(spec, runners, params, ctx_c, a_mask, e_steps,
+                           keys, qstate, qkey, guards=guards)
+
+    if not jit:
+        return round_fn
+    return jax.jit(round_fn, donate_argnums=(0, 6) if donate else ())
+
+
 def _quant_key(spec: FrameworkSpec, key):
     """Quantization RNG stream, derived by fold_in so the per-client split
     chain (and hence quant=none numerics) is untouched.  The trailing
@@ -680,8 +724,10 @@ class FixedKPolicy:
         cand = np.flatnonzero(self.sp.avail > 0)
         a = np.zeros(self.sp.M)
         if cand.size == self.sp.M:
-            a[self.rng.choice(self.sp.M, self.K, replace=False)] = 1.0
-            k = self.K
+            # population cohorts can be smaller than K; clamping leaves the
+            # RNG stream untouched whenever K <= M (the parity-pinned case)
+            k = min(self.K, self.sp.M)
+            a[self.rng.choice(self.sp.M, k, replace=False)] = 1.0
         else:
             if cand.size == 0:            # total blackout: never stall
                 cand = np.arange(self.sp.M)

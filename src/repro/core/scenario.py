@@ -49,11 +49,14 @@ scanned campaign (zero per-round host syncs — the transfer-guard test runs
 with scenarios on), and latency/cost/energy vectorize over trace ×
 schedule (``repro.core.cost.schedule_metrics``).
 
-Registry: ``static`` | ``fading`` | ``straggler`` | ``noniid``.  A name
-may carry a level suffix — ``"fading:0.8"`` (fade depth σ),
-``"straggler:0.4"`` (blackout probability), ``"noniid:0.1"`` (Dirichlet
-α).  ``static`` is all-ones: schedules, metrics and selection are
-byte-identical to runs that never heard of scenarios.
+Registry: ``static`` | ``fading`` | ``straggler`` | ``noniid`` |
+``faults`` | ``churn``.  A name may carry a level suffix —
+``"fading:0.8"`` (fade depth σ), ``"straggler:0.4"`` (blackout
+probability), ``"noniid:0.1"`` (Dirichlet α), ``"faults:0.2"`` (failure
+intensity), ``"churn:0.5"`` (churn depth — the registered population
+``m_t`` varies round to round).  ``static`` is all-ones: schedules,
+metrics and selection are byte-identical to runs that never heard of
+scenarios.
 """
 from __future__ import annotations
 
@@ -84,6 +87,11 @@ class ScenarioTrace:
     poison: Optional[np.ndarray] = None     # (R, M) 1 = NaN-poisoned update
     crash: Optional[np.ndarray] = None      # (R,)   1 = server-crash round
     wire_gain: Optional[np.ndarray] = None  # (R, M) payload corruption gain
+    # population churn (the ``churn`` family): registered population size
+    # per round.  Materialized mode folds it into ``avail`` (ids >= m_t are
+    # unregistered); population mode (repro.core.population) samples its
+    # round-t cohort from [0, m_t).
+    m_t: Optional[np.ndarray] = None        # (R,) registered clients
 
     @property
     def rounds(self) -> int:
@@ -252,6 +260,37 @@ def _gen_noniid(rounds: int, m: int, seed: int,
     return {"data_alpha": alpha}
 
 
+def churn_m_t(rounds: int, m: int, seed: int,
+              level: Optional[float] = None) -> np.ndarray:
+    """Registered-population size per round for the ``churn`` family: a
+    diurnal-style sinusoidal cycle (period 8 rounds, random phase) dented
+    by mild Gaussian noise.  ``level`` is the churn depth — the fraction of
+    the population that de-registers at the trough (default 0.5).  Shared
+    by the materialized ``churn`` trace and the population-mode
+    ``PopulationTrace`` so both modes see the same m_t sequence."""
+    amp = 0.5 if level is None else float(level)
+    amp = min(max(amp, 0.0), 0.95)
+    rng = np.random.default_rng([int(seed), 0x43485552])       # "CHUR"
+    phase = rng.uniform(0.0, 2.0 * np.pi)
+    noise = rng.normal(0.0, 0.03, rounds)
+    cycle = 0.5 + 0.5 * np.sin(2.0 * np.pi * np.arange(rounds) / 8.0 + phase)
+    frac = np.clip(1.0 - amp * cycle + noise, 0.02, 1.0)
+    return np.clip(np.round(m * frac), 1, m).astype(np.int64)
+
+
+def _gen_churn(rounds: int, m: int, seed: int,
+               level: Optional[float] = None) -> Dict[str, np.ndarray]:
+    """Population churn: the registered population shrinks and regrows
+    round to round (devices power off overnight, re-register at peak).  In
+    materialized mode client ids at or above the round's ``m_t`` are
+    simply not registered — they drop out of ``avail`` so no policy can
+    select them.  The population runner samples cohorts from [0, m_t)
+    instead and never materializes the (R, M) mask."""
+    m_t = churn_m_t(rounds, m, seed, level=level)
+    avail = (np.arange(m)[None, :] < m_t[:, None]).astype(np.float64)
+    return {"avail": avail, "m_t": m_t}
+
+
 # exponent-bit-flip magnitude of a corrupted wire payload: a single flipped
 # exponent bit multiplies a float by 2^±k; 2^12 ≈ 4096x is far outside any
 # healthy update norm yet finite, so only the norm-clip guard catches it
@@ -292,6 +331,7 @@ _REGISTRY: Dict[str, Callable[..., Dict[str, np.ndarray]]] = {
     "straggler": _gen_straggler,
     "noniid": _gen_noniid,
     "faults": _gen_faults,
+    "churn": _gen_churn,
 }
 
 ScenarioLike = Union[None, str, ScenarioTrace]
@@ -329,7 +369,7 @@ def make_trace(name: str, rounds: int, n_clients: int, *,
         deadline_scale=ch.get("deadline_scale", ones).copy(),
         data_alpha=ch.get("data_alpha"),
         poison=ch.get("poison"), crash=ch.get("crash"),
-        wire_gain=ch.get("wire_gain"))
+        wire_gain=ch.get("wire_gain"), m_t=ch.get("m_t"))
 
 
 def get_trace(scenario: ScenarioLike, rounds: int, n_clients: int, *,
@@ -363,7 +403,7 @@ def get_trace(scenario: ScenarioLike, rounds: int, n_clients: int, *,
             deadline_scale=scenario.deadline_scale[:rounds],
             data_alpha=scenario.data_alpha,
             poison=cut(scenario.poison), crash=cut(scenario.crash),
-            wire_gain=cut(scenario.wire_gain))
+            wire_gain=cut(scenario.wire_gain), m_t=cut(scenario.m_t))
     return scenario
 
 

@@ -89,6 +89,43 @@ def partition_non_iid(X: np.ndarray, y: np.ndarray, n_clients: int,
 _ALPHA_SEED_EXACT = 1e-6
 
 
+def draw_client_shard(rng: np.random.Generator, by_class, samples_per_client:
+                      int, alpha, anchor: int) -> np.ndarray:
+    """One client's shard draw — sample indices into (X, y) from the class
+    pools ``by_class`` using the generator ``rng``.
+
+    This is the per-client body of ``partition_dirichlet`` factored out so
+    ``repro.core.population`` can draw a single client's shard from the
+    client's OWN rng stream without materializing the other M-1 shards.
+    ``alpha`` None (or below the point-mass threshold) is the paper's
+    one-class-per-client draw from the ``anchor`` class pool; otherwise an
+    anchored Dirichlet(α) mixture.  Classes absent from ``y`` (empty
+    pools) get probability zero — with few samples and many clients a
+    class can vanish from a small pool, and ``rng.choice`` on an empty
+    pool would raise."""
+    n_classes = len(by_class)
+    pool_ok = np.array([len(b) > 0 for b in by_class])
+    if not pool_ok.any():
+        raise ValueError("all class pools are empty; nothing to sample")
+    if alpha is None or alpha <= _ALPHA_SEED_EXACT:
+        if not pool_ok[anchor]:
+            anchor = int(np.argmax(pool_ok))
+        return rng.choice(by_class[anchor], samples_per_client, replace=True)
+    p = rng.dirichlet(np.full(n_classes, float(alpha)))
+    # swap the largest share onto the anchor class
+    top = int(np.argmax(p))
+    p[anchor], p[top] = p[top], p[anchor]
+    if not pool_ok.all():
+        p = np.where(pool_ok, p, 0.0)
+        s = p.sum()
+        p = p / s if s > 0 else pool_ok / pool_ok.sum()
+    counts = rng.multinomial(samples_per_client, p)
+    take = np.concatenate([
+        rng.choice(by_class[c], counts[c], replace=True)
+        for c in range(n_classes) if counts[c] > 0])
+    return take[rng.permutation(samples_per_client)]
+
+
 def partition_dirichlet(X: np.ndarray, y: np.ndarray, n_clients: int,
                         samples_per_client: int, alpha: float,
                         seed: int = 0) -> Dict[str, np.ndarray]:
@@ -117,16 +154,8 @@ def partition_dirichlet(X: np.ndarray, y: np.ndarray, n_clients: int,
     Xc = np.zeros((n_clients, samples_per_client, X.shape[1]), np.float32)
     yc = np.zeros((n_clients, samples_per_client), np.int32)
     for m in range(n_clients):
-        p = rng.dirichlet(np.full(N_CLASSES, float(alpha)))
-        # swap the largest share onto the anchor class m % C
-        anchor = m % N_CLASSES
-        top = int(np.argmax(p))
-        p[anchor], p[top] = p[top], p[anchor]
-        counts = rng.multinomial(samples_per_client, p)
-        take = np.concatenate([
-            rng.choice(by_class[c], counts[c], replace=True)
-            for c in range(N_CLASSES) if counts[c] > 0])
-        take = take[rng.permutation(samples_per_client)]
+        take = draw_client_shard(rng, by_class, samples_per_client, alpha,
+                                 m % N_CLASSES)
         Xc[m], yc[m] = X[take], y[take]
     return {"x": Xc, "y": yc}
 

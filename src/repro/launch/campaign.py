@@ -58,6 +58,15 @@ non-finite aggregates in-scan — still one compiled program, one transfer.
 ``checkpoint_every``/``checkpoint_dir``/``resume`` split the scan at
 checkpoint boundaries and persist/restore the full campaign carry so a
 SIGKILLed campaign resumes bit-exactly.
+
+Population mode (``repro.core.population``): ``run_population_campaign``
+trains against a parameterized ``Population`` of up to millions of
+virtual clients with O(cohort) memory — per-round cohorts are sampled
+from the scenario seed, their SystemParams rows / trace channels / data
+shards generated lazily for the sampled ids only, and the scan's operands
+are cohort-shaped (the checkpoint carry stays O(cohort) too).  Sampling
+the whole population as the cohort reproduces the materialized
+``run_campaign`` exactly (test-pinned at 1e-5).
 """
 from __future__ import annotations
 
@@ -71,7 +80,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.splitme_dnn import DNNConfig
-from repro.core import engine, scenario as scen
+from repro.core import engine, population as popn, scenario as scen
 from repro.core.cost import SystemParams, schedule_metrics
 from repro.core.engine import RoundMetrics
 
@@ -752,6 +761,391 @@ def _run_rounds_scan(spec, cfg, sp, sched, x, y, seeds, do_eval, eval_fn,
             params, key_arr, qstate, xs)
         ys_all.append(ys)
         end = start + length
+        if ckpt is not None and (end % ckpt["every"] == 0 or end == rounds):
+            from repro.launch import resilience
+            done = {k: (jnp.concatenate([ys[k] for ys in ys_all], axis=0)
+                        if len(ys_all) > 1 else ys_all[0][k])
+                    for k in ys_all[0]}
+            resilience.save_checkpoint(
+                ckpt["dir"], end,
+                {"params": params, "keys": key_arr, "qstate": qstate},
+                done, fingerprint=ckpt["fingerprint"], rounds=rounds,
+                framework=ckpt["framework"], n_seeds=ckpt["n_seeds"])
+            if ckpt["hook"] is not None:
+                ckpt["hook"](end)
+
+    buffers = {k: (jnp.concatenate([ys[k] for ys in ys_all], axis=0)
+                   if len(ys_all) > 1 else ys_all[0][k])
+               for k in ys_all[0]}
+    return params, buffers
+
+
+# ---------------------------------------------------------------------------
+# Population mode: O(cohort) campaigns over millions of virtual clients
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PopulationSchedule:
+    """Precomputed system-side trajectory of a POPULATION campaign.
+
+    Everything is cohort-shaped: round t touches the ``cohort_sizes[t]``
+    distinct clients in ``ids[t]`` (pads repeat ``ids[t, 0]`` and are never
+    selectable), and ``a``/``b`` index cohort POSITIONS, not client ids.
+    ``rows`` carries the REALIZED per-round Q_C/Q_S/gain of the sampled
+    clients (framework derivation and trace channels applied) — the
+    absolute values ``cost.schedule_metrics(rows=...)`` vectorizes over,
+    since a round-invariant base doesn't exist when every round samples a
+    different cohort."""
+    ids: np.ndarray           # (R, C) int64 sampled client ids
+    a: np.ndarray             # (R, C) realized selection over positions
+    b: np.ndarray             # (R, C) bandwidth fractions
+    E: np.ndarray             # (R,)   local-update counts
+    m_t: np.ndarray           # (R,)   registered population per round
+    cohort_sizes: np.ndarray  # (R,)   distinct sampled ids (<= C)
+    rows: Dict[str, np.ndarray]           # {"q_c","q_s","gain"} each (R, C)
+    trace: Optional[popn.PopulationTrace] = None
+
+    @property
+    def rounds(self) -> int:
+        return len(self.E)
+
+
+def plan_population_schedule(framework: str, population: popn.Population,
+                             cfg: DNNConfig, rounds: int, *, cohort: int,
+                             policy_seed: int = 0, K: int = 10, E: int = 10,
+                             e_initial: int = 20,
+                             n_samples_per_client: Optional[int] = None,
+                             quant=None, scenario=None,
+                             scenario_seed: int = 0,
+                             stratified: bool = False
+                             ) -> Tuple[SystemParams, PopulationSchedule]:
+    """Run the framework's host-side policy over per-round SAMPLED cohorts.
+
+    The cohort pipeline per round t: sample ``min(cohort, m_t)`` distinct
+    ids from the round's registered population (uniform or stratified by
+    anchor class; deterministic in ``(scenario_seed, t)`` alone, so a
+    resume replans identically) → evaluate the sampled clients' rows and
+    the trace's lazy channels → write them into the framework's derived
+    SystemParams copy → ``policy.step()`` selects/allocates within the
+    cohort — the existing deadline/energy policies run UNCHANGED, they
+    just see cohort-sized arrays.  Memory is O(R × cohort); the population
+    size only enters through the samplers.
+
+    With ``scenario=None`` and ``cohort >= population.size`` every round's
+    cohort is the whole population in id order and the planned schedule
+    equals ``plan_schedule`` on ``population.system_params(arange(size))``
+    (the parity the population tests pin)."""
+    ptrace = popn.get_population_trace(scenario, rounds, population.size,
+                                       seed=scenario_seed)
+    m_t = (ptrace.m_t if ptrace is not None
+           else np.full(rounds, population.size, np.int64))
+    C = int(min(cohort, population.size))
+    if C < 1:
+        raise ValueError(f"cohort must be >= 1, got {cohort}")
+    ids = np.zeros((rounds, C), np.int64)
+    csize = np.zeros(rounds, np.int64)
+    for t in range(rounds):
+        got = popn.sample_cohort(scenario_seed, t, m_t[t], C,
+                                 stratified=stratified)
+        csize[t] = got.size
+        ids[t, :got.size] = got
+        if got.size < C:
+            ids[t, got.size:] = got[0]     # pads: real data, never selected
+    sp, policy = engine.make_policy(
+        framework, population.system_params(ids[0]), cfg, seed=policy_seed,
+        K=K, E=E, e_initial=e_initial,
+        n_samples_per_client=n_samples_per_client, quant=quant)
+    fold_offload = framework == "oranfed"  # make_policy folded Q_S into Q_C
+    pos = np.arange(C)
+    a_l, b_l, e_l = [], [], []
+    q_c_all = np.zeros((rounds, C))
+    q_s_all = np.zeros((rounds, C))
+    gain_all = np.zeros((rounds, C))
+    for t in range(rounds):
+        r = population.rows(ids[t])
+        ch = ptrace.channels(t, ids[t]) if ptrace is not None else None
+        q_c = r["Q_C"] * (ch["qc_scale"] if ch is not None else 1.0)
+        q_s = r["Q_S"] * (ch["qs_scale"] if ch is not None else 1.0)
+        if fold_offload:
+            q_c, q_s = q_c + q_s, np.zeros_like(q_s)
+        gain = r["G_m"] * (ch["gain"] if ch is not None else 1.0)
+        pad_live = (pos < csize[t]).astype(np.float64)
+        # the policies read sp's arrays on every step(); S_m / omega /
+        # d_model_bits are cohort-invariant under every derivation, so only
+        # the per-client rows are rewritten round to round
+        sp.Q_C, sp.Q_S, sp.G_m = q_c, q_s, gain
+        sp.t_round = r["t_round"] * (ch["deadline_scale"] if ch is not None
+                                     else 1.0)
+        sp.avail = (ch["avail"] if ch is not None else 1.0) * pad_live
+        a, b, e = policy.step()
+        if ch is not None:
+            a_real = a * ch["drop"]
+            if a_real.sum() == 0 and a.sum() > 0:   # never stall
+                a_real = np.zeros_like(a)
+                a_real[np.argmax(a > 0)] = 1.0
+            a = a_real
+        a_l.append(a), b_l.append(b), e_l.append(e)
+        q_c_all[t], q_s_all[t], gain_all[t] = q_c, q_s, gain
+    sched = PopulationSchedule(
+        ids=ids, a=np.stack(a_l), b=np.stack(b_l),
+        E=np.asarray(e_l, np.int32), m_t=np.asarray(m_t, np.int64),
+        cohort_sizes=csize,
+        rows={"q_c": q_c_all, "q_s": q_s_all, "gain": gain_all},
+        trace=ptrace)
+    return sp, sched
+
+
+def run_population_campaign(framework: str, cfg: DNNConfig,
+                            population: popn.Population, data, *,
+                            rounds: int, seeds: Sequence[int], cohort: int,
+                            samples_per_client: int = 64, test_data=None,
+                            K: int = 10, E: int = 10, e_initial: int = 20,
+                            policy_seed: Optional[int] = None,
+                            eval_every: Optional[int] = None,
+                            eval_gamma: float = 1e-3,
+                            strict_transfers: bool = False, policy=None,
+                            quant=None, scenario=None,
+                            scenario_seed: int = 0,
+                            stratified: bool = False, guards=None,
+                            checkpoint_every: Optional[int] = None,
+                            checkpoint_dir=None, resume: bool = False,
+                            _checkpoint_hook=None, **hyper
+                            ) -> CampaignResult:
+    """The scanned campaign over a ``Population`` — O(cohort) in memory.
+
+    ``data`` is the raw ``(X, y)`` sample pool; each round's cohort draws
+    its clients' lazy shards from it (``Population.sample_shards``), and
+    the stacked per-round cohort data become scan operands — the runner
+    holds O(rounds × cohort × samples) host bytes and O(cohort) device
+    bytes, NEVER O(population).  Everything else matches ``run_campaign``:
+    one compiled scan per (E-bucket, length-bucket), one host transfer
+    (``strict_transfers`` enforceable), fused eval behind ``do_eval``,
+    CommQuant wire formats, ``RoundGuards``, and checkpoint/resume with
+    the cohort plan hashed into the schedule fingerprint.  Fault-injection
+    scenarios are materialized-only (population traces carry no fault
+    channels, so ``scenario="faults:p"`` is rejected by the trace
+    registry).
+
+    SplitMe's fused/post-hoc evaluation needs client data for the Step-4
+    Gram sums; population campaigns use the FINAL round's cohort shards —
+    with ``cohort >= population.size`` that is the full materialized
+    dataset, keeping the parity contract exact."""
+    X = np.asarray(data[0])
+    y = np.asarray(data[1])
+    if policy_seed is None:
+        policy_seed = min(seeds)
+    sp, sched = plan_population_schedule(
+        framework, population, cfg, rounds, cohort=cohort,
+        policy_seed=policy_seed, K=K, E=E, e_initial=e_initial,
+        n_samples_per_client=samples_per_client, quant=quant,
+        scenario=scenario, scenario_seed=scenario_seed,
+        stratified=stratified)
+    spec = engine.make_spec(framework, cfg, masked_loss_metric=True,
+                            policy=policy, quant=quant, **hyper)
+    comm = np.atleast_1d(np.asarray(
+        spec.comm_model(sched.a, sched.E, sp), np.float64))
+    nsel = sched.a.sum(axis=1).astype(int)
+    sim, cost, energy = schedule_metrics(sched.a, sched.b, sched.E, sp,
+                                         rows=sched.rows)
+
+    # per-round cohort shards, drawn lazily for the sampled ids only
+    alpha = "population"
+    if sched.trace is not None and sched.trace.data_alpha is not None:
+        alpha = sched.trace.data_alpha
+    C = sched.ids.shape[1]
+    xc_all = np.zeros((rounds, C, samples_per_client, X.shape[1]),
+                      np.float32)
+    yc_all = np.zeros((rounds, C, samples_per_client), np.int32)
+    for t in range(rounds):
+        sh = population.sample_shards(X, y, sched.ids[t],
+                                      samples_per_client, alpha=alpha)
+        xc_all[t], yc_all[t] = sh["x"], sh["y"]
+
+    if guards is False:
+        guards = None
+    if checkpoint_every or checkpoint_dir or resume:
+        if not (checkpoint_every and checkpoint_dir is not None):
+            raise ValueError("checkpointing needs BOTH checkpoint_every "
+                             "and checkpoint_dir (resume implies both)")
+        if strict_transfers:
+            raise ValueError("checkpoint_every is incompatible with "
+                             "strict_transfers: each segment save is an "
+                             "explicit device→host pull")
+
+    eval_fn = None
+    do_eval = np.zeros(rounds, np.float32)
+    if test_data is not None:
+        client_data = None
+        if framework == "splitme":
+            client_data = {"x": jnp.asarray(xc_all[-1]),
+                           "y": jnp.asarray(yc_all[-1])}
+        eval_fn = engine.build_eval_fn(spec, cfg, *test_data,
+                                       gamma=eval_gamma, jit=False,
+                                       client_data=client_data)
+        if eval_every:
+            do_eval[eval_every - 1::eval_every] = 1.0
+        do_eval[rounds - 1] = 1.0
+
+    ckpt = None
+    if checkpoint_every:
+        from repro.launch import resilience
+        fp = resilience.schedule_fingerprint(
+            framework, seeds, sched, do_eval=do_eval,
+            quant_mode=spec.quant.mode, checkpoint_every=checkpoint_every,
+            extra=(sched.ids, sched.m_t))
+        resume_from = None
+        if resume:
+            resume_from = resilience.latest_checkpoint(checkpoint_dir)
+            if resume_from is not None:
+                meta = resilience.load_checkpoint_meta(resume_from)
+                if meta.get("fingerprint") != fp:
+                    raise ValueError(
+                        f"checkpoint {resume_from} was written by a "
+                        f"different campaign plan (schedule fingerprint "
+                        f"mismatch); refusing to resume")
+        ckpt = {"dir": checkpoint_dir, "every": int(checkpoint_every),
+                "fingerprint": fp, "resume_from": resume_from,
+                "hook": _checkpoint_hook, "framework": framework,
+                "n_seeds": len(seeds)}
+
+    guard = (jax.transfer_guard_device_to_host("disallow")
+             if strict_transfers else contextlib.nullcontext())
+    with guard:
+        params, buffers = _run_population_scan(
+            spec, cfg, sp, sched, xc_all, yc_all, seeds, do_eval, eval_fn,
+            guards=guards, ckpt=ckpt)
+    host = _host_fetch(buffers)            # THE per-campaign transfer
+
+    live = host["live"] > 0
+    losses = np.transpose(host["loss"][live], (1, 0, 2))   # (S, R, n_ph)
+    acc_rounds = np.asarray(host["acc"][live])             # (R, S)
+    skipped = quorum = None
+    if guards is not None:
+        skipped = np.asarray(host["skipped"][live])
+        quorum = np.asarray(host["quorum"][live])
+    result = CampaignResult(
+        framework=framework, seeds=tuple(seeds), schedule=sched,
+        params=params, losses=losses,
+        metrics=_make_metrics(sched, comm, nsel, sim, cost, energy, losses,
+                              acc_rounds if test_data is not None else None,
+                              skipped=skipped, quorum=quorum),
+        accuracy_per_round=acc_rounds if test_data is not None else None,
+        skipped_per_round=skipped, quorum_per_round=quorum)
+    if test_data is not None:
+        result.accuracy = acc_rounds[rounds - 1]
+    return result
+
+
+def _run_population_scan(spec, cfg, sp, sched: PopulationSchedule, xc_all,
+                         yc_all, seeds, do_eval, eval_fn, guards=None,
+                         ckpt=None):
+    """Scan all rounds of a population campaign on-device.
+
+    The structure mirrors ``_run_rounds_scan`` with one inversion: instead
+    of gathering cohorts out of a fixed closed-over dataset, the per-round
+    cohort DATA are scan operands (``xc``/``yc``) feeding
+    ``engine.build_cohort_round_fn`` — the device never holds more than
+    one segment's cohorts.  The cohort width C is constant, so segments
+    split only on (E-bucket, length-bucket) and checkpoint boundaries;
+    the carry ({params, keys, qstate}) is population-size-free and
+    persists/restores through the same resilience layer."""
+    rounds = sched.rounds
+    n_seeds = len(seeds)
+    C = int(sched.ids.shape[1])
+    e_of = _bucket_cohorts(sched.E, int(sp.E_max))
+    eb_r = [e_of[int(e)] for e in sched.E]
+    segs = _split_at_checkpoints(_plan_segments([C] * rounds, eb_r),
+                                 ckpt["every"] if ckpt else None)
+    len_of = _bucket_cohorts([l for *_, l in segs],
+                             max(l for *_, l in segs))
+    n_ph = len(spec.phases)
+    fns: Dict[Tuple[int, int], Any] = {}
+
+    def seg_exec(eb: int, lb: int):
+        if (eb, lb) in fns:
+            return fns[eb, lb]
+        raw = engine.build_cohort_round_fn(spec, cfg, e_max=max(1, eb),
+                                           jit=False, guards=guards)
+        nan_row = jnp.full((n_seeds,), jnp.nan, jnp.float32)
+
+        def body(carry, xr):
+            params, keys, qstate = carry
+            ks = jax.vmap(jax.random.split)(keys)
+            nkeys, subs = ks[:, 0], ks[:, 1]
+            out = jax.vmap(raw, in_axes=(0, None, None, None, None, 0, 0))(
+                params, xr["xc"], xr["yc"], xr["mask"], xr["e"], subs,
+                qstate)
+            if guards is not None:
+                nparams, phase_losses, nqstate, flags = out
+            else:
+                nparams, phase_losses, nqstate = out
+                flags = None
+            live = xr["live"] > 0
+            params = jax.tree.map(lambda n, o: jnp.where(live, n, o),
+                                  nparams, params)
+            qstate = jax.tree.map(lambda n, o: jnp.where(live, n, o),
+                                  nqstate, qstate)
+            keys = jnp.where(live, nkeys, keys)
+            loss_row = jnp.where(live, jnp.stack(phase_losses, -1), jnp.nan)
+            if eval_fn is None:
+                acc = nan_row
+            else:
+                acc = jax.lax.cond(
+                    jnp.logical_and(xr["do_eval"] > 0, live),
+                    jax.vmap(eval_fn), lambda p: nan_row, params)
+            ys = {"loss": loss_row, "acc": acc, "live": xr["live"]}
+            if guards is not None:
+                ys["skipped"] = jnp.where(live, flags["skipped"], 0.0)
+                ys["quorum"] = jnp.where(live, flags["quorum"], 0.0)
+            return (params, keys, qstate), ys
+
+        def seg(params, key_arr, qstate, xs):
+            return jax.lax.scan(body, (params, key_arr, qstate), xs)
+
+        fns[eb, lb] = jax.jit(seg, donate_argnums=(0, 1, 2))
+        return fns[eb, lb]
+
+    init_keys = jnp.stack([jax.random.PRNGKey(s + spec.init_key_offset)
+                           for s in seeds])
+    key_arr = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    params = jax.vmap(spec.init_fn)(init_keys)
+    qstate = _init_qstate(spec, params)
+    ys_all = []
+    start_round = 0
+    if ckpt is not None and ckpt["resume_from"] is not None:
+        from repro.checkpoint import io
+        path = ckpt["resume_from"]
+        like = {"params": params, "keys": key_arr, "qstate": qstate}
+        state = io.restore(path, like)
+        params, key_arr, qstate = \
+            state["params"], state["keys"], state["qstate"]
+        buf = io.load_arrays(Path(path).with_name(Path(path).name
+                                                  + "-buffers"))
+        ys_all.append({k: jnp.asarray(v) for k, v in buf.items()})
+        start_round = int(io.manifest(path)["metadata"]["round_cursor"])
+    n_samples = xc_all.shape[2]
+    for _, eb, start, length in segs:
+        if start + length <= start_round:
+            continue                       # restored from the checkpoint
+        lb = len_of[length]
+        xs = {
+            "e": np.zeros(lb, np.int32),
+            "live": np.zeros(lb, np.float32),
+            "do_eval": np.zeros(lb, np.float32),
+            "mask": np.zeros((lb, C), np.float32),
+            "xc": np.zeros((lb, C, n_samples, xc_all.shape[3]), np.float32),
+            "yc": np.zeros((lb, C, n_samples), np.int32),
+        }
+        end = start + length
+        xs["e"][:length] = sched.E[start:end]
+        xs["live"][:length] = 1.0
+        xs["do_eval"][:length] = do_eval[start:end]
+        xs["mask"][:length] = sched.a[start:end]
+        xs["xc"][:length] = xc_all[start:end]
+        xs["yc"][:length] = yc_all[start:end]
+        (params, key_arr, qstate), ys = seg_exec(eb, lb)(
+            params, key_arr, qstate, xs)
+        ys_all.append(ys)
         if ckpt is not None and (end % ckpt["every"] == 0 or end == rounds):
             from repro.launch import resilience
             done = {k: (jnp.concatenate([ys[k] for ys in ys_all], axis=0)

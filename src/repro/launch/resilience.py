@@ -109,9 +109,14 @@ def checkpoint_tag(round_cursor: int) -> str:
 
 
 def schedule_fingerprint(framework: str, seeds, sched, *, do_eval,
-                         quant_mode: str, checkpoint_every: int) -> str:
+                         quant_mode: str, checkpoint_every: int,
+                         extra=()) -> str:
     """Digest of everything a resume must replan identically (see module
-    docstring).  ``sched`` is a ``campaign.RoundSchedule``."""
+    docstring).  ``sched`` is a ``campaign.RoundSchedule`` or a
+    ``campaign.PopulationSchedule`` (whose trace carries no fault
+    channels); ``extra`` appends further plan arrays — the population
+    runner hashes its per-round cohort ids and m_t so resuming against a
+    drifted cohort plan fails loudly."""
     h = hashlib.sha256()
     h.update(framework.encode())
     h.update(np.asarray(sorted(int(s) for s in seeds), np.int64).tobytes())
@@ -120,10 +125,12 @@ def schedule_fingerprint(framework: str, seeds, sched, *, do_eval,
     for arr in (sched.a, sched.b, sched.E, do_eval):
         h.update(np.ascontiguousarray(np.asarray(arr, np.float64)).tobytes())
     tr = sched.trace
-    for ch in ((tr.poison, tr.crash, tr.wire_gain) if tr is not None
-               else (None, None, None)):
+    for name in ("poison", "crash", "wire_gain"):
+        ch = getattr(tr, name, None) if tr is not None else None
         h.update(b"\0" if ch is None else
                  np.ascontiguousarray(np.asarray(ch, np.float64)).tobytes())
+    for arr in extra:
+        h.update(np.ascontiguousarray(np.asarray(arr, np.float64)).tobytes())
     return h.hexdigest()
 
 

@@ -2,8 +2,11 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # property tests need the dev extra
-from hypothesis import given, settings, strategies as st
+try:  # only the property test needs the dev extra
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.data import oran
 
@@ -19,9 +22,15 @@ def test_class_balance_and_shapes():
     np.testing.assert_allclose(X.std(0), 1.0, atol=0.05)
 
 
-@settings(max_examples=10, deadline=None)
-@given(n_clients=st.integers(3, 50), spc=st.integers(4, 64),
-       seed=st.integers(0, 100))
+if HAVE_HYPOTHESIS:
+    _partition_args = settings(max_examples=10, deadline=None)(
+        given(n_clients=st.integers(3, 50), spc=st.integers(4, 64),
+              seed=st.integers(0, 100)))
+else:
+    _partition_args = pytest.mark.skip(reason="hypothesis not installed")
+
+
+@_partition_args
 def test_non_iid_partition_one_class_per_client(n_clients, spc, seed):
     X, y = oran.generate(n_per_class=300, seed=0, label_noise=0.0)
     part = oran.partition_non_iid(X, y, n_clients, spc, seed=seed)
@@ -49,3 +58,57 @@ def test_generation_is_deterministic():
     b = oran.generate(100, seed=7)
     np.testing.assert_array_equal(a[0], b[0])
     np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_dirichlet_many_more_clients_than_samples():
+    """M >> total samples: every client still gets a full shard (pools are
+    sampled with replacement), with the anchored class structure intact."""
+    X, y = oran.generate(n_per_class=10, seed=0, label_noise=0.0)  # 30 total
+    part = oran.partition_dirichlet(X, y, n_clients=500,
+                                    samples_per_client=16, alpha=0.05,
+                                    seed=0)
+    assert part["x"].shape == (500, 16, oran.N_FEATURES)
+    # small alpha anchors each client on class m % 3
+    anchored = np.mean([(part["y"][m] == m % 3).mean() > 0.5
+                        for m in range(500)])
+    assert anchored > 0.8
+
+
+def test_dirichlet_single_class_pool():
+    """A y with classes missing (empty pools) must not crash: absent
+    classes get probability zero and the draw falls back to the pools
+    that exist."""
+    X, y = oran.generate(n_per_class=50, seed=0, label_noise=0.0)
+    keep = y == 1                       # only mMTC samples survive
+    Xk, yk = X[keep], y[keep]
+    part = oran.partition_dirichlet(Xk, yk, n_clients=9,
+                                    samples_per_client=8, alpha=0.5, seed=0)
+    assert np.all(part["y"] == 1)       # the only class there is
+    # the exact-seed (alpha -> 0) delegation path hits the same guard:
+    # anchors 0 and 2 have empty pools and must re-anchor, not raise
+    rng = np.random.default_rng(0)
+    by_class = [np.where(yk == c)[0] for c in range(oran.N_CLASSES)]
+    take = oran.draw_client_shard(rng, by_class, 8, None, anchor=0)
+    assert np.all(yk[take] == 1)
+
+
+def test_draw_client_shard_all_empty_raises():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        oran.draw_client_shard(rng, [np.array([], int)] * 3, 8, 0.5, 0)
+
+
+def test_dirichlet_refactor_keeps_rng_sequence():
+    """The draw_client_shard factoring must not move partition_dirichlet's
+    RNG sequence: full-pool draws consume exactly the same variates as
+    before (pinned against the alpha-continuity values in
+    test_scenario.py by construction — here we just pin determinism and
+    the anchor swap)."""
+    X, y = oran.generate(n_per_class=100, seed=0, label_noise=0.0)
+    a = oran.partition_dirichlet(X, y, 6, 12, alpha=0.3, seed=4)
+    b = oran.partition_dirichlet(X, y, 6, 12, alpha=0.3, seed=4)
+    np.testing.assert_array_equal(a["x"], b["x"])
+    # anchored: each client's modal class is its round-robin slice
+    for m in range(6):
+        counts = np.bincount(b["y"][m], minlength=3)
+        assert counts[m % 3] == counts.max()

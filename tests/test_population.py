@@ -1,0 +1,197 @@
+"""Population scale-out (repro.core.population + run_population_campaign).
+
+Pins the tentpole contracts:
+
+* cohort sampling is deterministic in (seed, t) alone, draws distinct
+  sorted ids within the registered population, and the stratified
+  variant covers every anchor-class stratum;
+* lazy per-client attribute rows are deterministic, id-addressable (any
+  subset in any order yields the same values) and land in the
+  parameterized ranges — at any population size, without materializing;
+* PARITY: with scenario=None and cohort >= population size, the
+  population campaign reproduces the materialized ``run_campaign`` on
+  the same clients at 1e-5;
+* memory/scale: planning and running at M = 1e6 never materializes an
+  O(M) array;
+* churn: the registered population m_t varies and every sampled id is
+  < m_t;
+* checkpoint/resume of a population campaign is deterministic across
+  the resume boundary (same final losses as the uninterrupted run).
+"""
+import numpy as np
+import pytest
+
+from repro.configs.splitme_dnn import DNNConfig
+from repro.core import population as popn
+from repro.core.cost import SystemParams
+from repro.launch import campaign
+
+CFG = DNNConfig(hidden=(32, 16), split_index=1)
+
+
+@pytest.fixture(scope="module")
+def pools():
+    from repro.data import oran
+    X, y = oran.generate(n_per_class=300, seed=0)
+    (Xtr, ytr), (Xte, yte) = oran.train_test_split(X, y)
+    return (Xtr, ytr), (Xte, yte)
+
+
+# ---------------------------------------------------------------------------
+# cohort sampler
+# ---------------------------------------------------------------------------
+
+def test_sample_cohort_deterministic_and_distinct():
+    a = popn.sample_cohort(7, 3, 10_000, 64)
+    b = popn.sample_cohort(7, 3, 10_000, 64)
+    np.testing.assert_array_equal(a, b)          # resume replans identically
+    assert len(np.unique(a)) == 64 == len(a)
+    assert a.min() >= 0 and a.max() < 10_000
+    assert np.all(np.diff(a) > 0)                # sorted
+    c = popn.sample_cohort(7, 4, 10_000, 64)
+    assert not np.array_equal(a, c)              # rounds differ
+    d = popn.sample_cohort(8, 3, 10_000, 64)
+    assert not np.array_equal(a, d)              # seeds differ
+
+
+def test_sample_cohort_small_population_edges():
+    # k >= m: the whole registered population, in order
+    np.testing.assert_array_equal(popn.sample_cohort(0, 0, 5, 8),
+                                  np.arange(5))
+    # 2k >= m: permutation-prefix path still distinct and in range
+    got = popn.sample_cohort(0, 1, 10, 7)
+    assert len(np.unique(got)) == 7 and got.max() < 10
+
+
+def test_sample_cohort_stratified_covers_strata():
+    got = popn.sample_cohort(3, 0, 9_999, 30, stratified=True)
+    assert len(np.unique(got)) == 30
+    # every anchor-class stratum (id mod n_strata) is represented ~evenly
+    counts = np.bincount(got % 3, minlength=3)
+    assert counts.min() >= 9
+
+
+# ---------------------------------------------------------------------------
+# lazy rows
+# ---------------------------------------------------------------------------
+
+def test_rows_deterministic_id_addressable_in_range():
+    pop = popn.Population(size=1_000_000, seed=5, gain_sigma=0.3)
+    ids = np.array([0, 17, 999_999, 123_456], np.int64)
+    r1 = pop.rows(ids)
+    # any subset, any order: same per-id values (pure function of id)
+    r2 = pop.rows(ids[::-1])
+    for k in r1:
+        np.testing.assert_array_equal(r1[k], r2[k][::-1])
+    lo, hi = pop.qc_range
+    assert np.all((r1["Q_C"] >= lo) & (r1["Q_C"] <= hi))
+    lo, hi = pop.qs_range
+    assert np.all((r1["Q_S"] >= lo) & (r1["Q_S"] <= hi))
+    lo, hi = pop.t_round_range
+    assert np.all((r1["t_round"] >= lo) & (r1["t_round"] <= hi))
+    assert np.all(r1["G_m"] > 0)                 # log-normal gain
+    sp = pop.system_params(ids)
+    assert isinstance(sp, SystemParams) and sp.M == len(ids)
+    np.testing.assert_array_equal(sp.Q_C, r1["Q_C"])
+
+
+def test_sample_shards_deterministic_per_client(pools):
+    (Xtr, ytr), _ = pools
+    pop = popn.Population(size=1000, seed=2)
+    ids = np.array([5, 900], np.int64)
+    s1 = pop.sample_shards(Xtr, ytr, ids, 16)
+    s2 = pop.sample_shards(Xtr, ytr, np.array([900], np.int64), 16)
+    np.testing.assert_array_equal(s1["x"][1], s2["x"][0])
+    assert s1["x"].shape == (2, 16, Xtr.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# parity with the materialized campaign
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fw", ["splitme", "fedavg", "oranfed"])
+def test_full_population_cohort_matches_materialized(pools, fw):
+    (Xtr, ytr), test = pools
+    M = 10
+    pop = popn.Population(size=M, seed=3)
+    res_p = campaign.run_population_campaign(
+        fw, CFG, pop, (Xtr, ytr), rounds=3, seeds=(0, 1), cohort=M,
+        samples_per_client=24, test_data=test, K=4, E=3)
+    ids = np.arange(M)
+    res_m = campaign.run_campaign(
+        fw, CFG, pop.system_params(ids),
+        pop.sample_shards(Xtr, ytr, ids, 24), rounds=3, seeds=(0, 1),
+        test_data=test, K=4, E=3)
+    np.testing.assert_allclose(res_p.losses, res_m.losses, atol=1e-5,
+                               rtol=0)
+    np.testing.assert_allclose(res_p.accuracy, res_m.accuracy, atol=1e-5,
+                               rtol=0)
+    for r in range(3):
+        assert res_p.metrics[r].n_selected == res_m.metrics[r].n_selected
+        np.testing.assert_allclose(res_p.metrics[r].comm_bits,
+                                   res_m.metrics[r].comm_bits)
+        np.testing.assert_allclose(res_p.metrics[r].cost,
+                                   res_m.metrics[r].cost, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# scale + churn
+# ---------------------------------------------------------------------------
+
+def test_million_client_plan_is_cohort_sized():
+    pop = popn.Population(size=1_000_000, seed=0)
+    sp, sched = campaign.plan_population_schedule(
+        "splitme", pop, CFG, rounds=4, cohort=16,
+        n_samples_per_client=16, scenario="churn:0.5")
+    assert sched.ids.shape == (4, 16)
+    assert sp.M == 16                            # cohort-sized, not 1e6
+    assert sched.m_t.max() <= 1_000_000 and len(np.unique(sched.m_t)) > 1
+    for t in range(4):
+        assert sched.ids[t].max() < sched.m_t[t]  # only registered clients
+    # rows carry absolute realized values for the sampled clients
+    assert sched.rows["q_c"].shape == (4, 16)
+
+
+def test_million_client_campaign_runs(pools):
+    (Xtr, ytr), test = pools
+    pop = popn.Population(size=1_000_000, seed=0)
+    res = campaign.run_population_campaign(
+        "splitme", CFG, pop, (Xtr, ytr), rounds=2, seeds=(0,), cohort=8,
+        samples_per_client=16, test_data=test, scenario="churn:0.5")
+    assert res.losses.shape == (1, 2, 2)
+    assert np.isfinite(res.accuracy).all()
+    assert res.schedule.ids.max() > 8            # actually sampled deep
+
+
+def test_faults_scenario_rejected_in_population_mode():
+    with pytest.raises(KeyError):
+        popn.make_population_trace("faults:0.3", 4, 100)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume determinism across the boundary
+# ---------------------------------------------------------------------------
+
+def test_population_resume_bit_exact(pools, tmp_path):
+    from repro.launch import resilience
+    (Xtr, ytr), test = pools
+    pop = popn.Population(size=5_000, seed=1)
+    kw = dict(rounds=4, seeds=(0, 1), cohort=6, samples_per_client=16,
+              test_data=test, scenario="churn:0.5",
+              checkpoint_every=2, checkpoint_dir=tmp_path)
+    full = campaign.run_population_campaign("fedavg", CFG, pop, (Xtr, ytr),
+                                            **kw)
+
+    def abort_after(cursor):
+        if cursor == 2:
+            raise resilience.CampaignAborted("test crash")
+
+    d2 = tmp_path / "interrupted"
+    kw2 = {**kw, "checkpoint_dir": d2}
+    with pytest.raises(resilience.CampaignAborted):
+        campaign.run_population_campaign("fedavg", CFG, pop, (Xtr, ytr),
+                                         _checkpoint_hook=abort_after, **kw2)
+    resumed = campaign.run_population_campaign(
+        "fedavg", CFG, pop, (Xtr, ytr), resume=True, **kw2)
+    np.testing.assert_array_equal(resumed.losses, full.losses)
+    np.testing.assert_array_equal(resumed.accuracy, full.accuracy)
